@@ -1,0 +1,32 @@
+"""Paper §3.1: connection/buffer scaling, classic vs hybrid exchange.
+
+Classic: every thread-level exchange operator talks to every other
+(n²t² − t connections).  Hybrid: one multiplexer per server (n(n−1)).
+The table reproduces the paper's 6×40 numbers and extends to pod scale —
+the reason the decoupled-multiplexer design is the only one that survives
+512+ chips.
+"""
+
+from repro.core import hybrid as H
+from .common import emit
+
+
+def run():
+    rows = [
+        (6, 40, "paper cluster"),
+        (16, 8, "1 exchange axis x 8 lanes"),
+        (256, 8, "one pod as servers"),
+        (512, 8, "two pods"),
+        (1024, 8, "4k-chip fleet"),
+    ]
+    for n, t, label in rows:
+        emit("connections/classic", H.classic_connections(n, t), "", f"{label} n={n},t={t}")
+        emit("connections/hybrid", H.hybrid_connections(n, t), "", label)
+        emit("buffers/classic", H.classic_buffers_per_operator(n, t), "/op", label)
+        emit("buffers/hybrid", H.hybrid_buffers_per_operator(n, t), "/op", label)
+        emit("broadcast_threshold/classic", H.broadcast_threshold(n, t, False), "x", label)
+        emit("broadcast_threshold/hybrid", H.broadcast_threshold(n, t, True), "x", label)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Fig 5 / Fig 12(b) analogue + the MoE exchange A/B.
+
+Fig 12(b): how much each engine speeds up as link bandwidth rises —
+transports that burn CPU per byte (TCP-like) or suffer contention
+(unscheduled) cannot convert bandwidth into query throughput; the
+scheduled zero-copy transport can.  Same model as bench_scaling.
+
+MoE A/B: per-device collective bytes of the expert-parallel dispatch from
+the dry-run artifacts — scheduled round-robin phases (collective-permute)
+vs XLA's monolithic all-to-all, modeled at ICI rates with/without the
+contention factor.  This is the paper's technique applied to its LM-era
+workload (DESIGN.md §4).
+"""
+
+import glob
+import json
+import os
+
+from repro.core import topology as T
+from .bench_scaling import query_time
+from .common import emit
+
+
+def fig12b():
+    n = 6
+    for name, sched, cpu in (
+        ("memsql_like_tcp", False, 0.45),
+        ("vortex_like_tcp", False, 0.20),
+        ("hyper_rdma_sched", True, 0.02),
+    ):
+        base = query_time(n, 0.125, sched, cpu)
+        for gbps in (0.125, 1.0, 2.0, 4.0):
+            s = base / query_time(n, gbps, sched, cpu)
+            emit(f"fig12b/{name}", f"{s:.2f}", "x", f"link={gbps}GB/s")
+    emit("fig12b/paper_claim", "12", "x", "HyPer RDMA 4xQDR vs GbE (paper)")
+
+
+def moe_exchange_ab(art_dir: str = "artifacts/dryrun_final"):
+    """Scheduled (ppermute phases) vs unscheduled (monolithic a2a) dispatch."""
+    for arch in ("olmoe-1b-7b", "deepseek-v2-lite-16b"):
+        f = os.path.join(art_dir, f"{arch}__train_4k__16x16.json")
+        if not os.path.exists(f):
+            continue
+        art = json.load(open(f))
+        coll = art["collective_bytes"]
+        cp = coll.get("collective-permute", 0)  # the scheduled phases
+        a2a = coll.get("all-to-all", 0)
+        link = T.V5E.ici_link_bandwidth
+        contention = T.contention_factor(16)
+        t_sched = cp / link
+        t_unsched = (cp + a2a) / link / contention
+        emit(f"moe_ab/{arch}/sched_dispatch", f"{t_sched*1e3:.1f}", "ms/step",
+             f"{cp/1e9:.1f}GB ppermute phases")
+        emit(f"moe_ab/{arch}/unsched_dispatch", f"{t_unsched*1e3:.1f}", "ms/step",
+             f"contention={contention:.2f}")
+        if t_sched > 0:
+            emit(f"moe_ab/{arch}/sched_gain", f"{t_unsched/t_sched:.2f}", "x", "")
+
+
+def run():
+    fig12b()
+    moe_exchange_ab()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Kernel-level microbenchmarks: Pallas (interpret) vs jnp reference.
+
+CPU wall time of interpret-mode Pallas is NOT TPU performance; what this
+bench reports that matters is the *memory-traffic model*: bytes the kernel
+touches vs bytes the unfused reference materializes (the VMEM-fusion win
+the kernels exist for), plus correctness deltas.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from .common import emit
+
+
+def flash_traffic():
+    B, H, KH, S, D = 1, 8, 2, 2048, 128
+    f32 = 4
+    logits_bytes = B * H * S * S * f32          # materialized by naive sdpa
+    flash_bytes = B * (H + 2 * KH) * S * D * 2  # q,k,v streamed once (bf16)
+    emit("kern/flash/naive_logits", f"{logits_bytes/1e6:.0f}", "MB", f"S={S}")
+    emit("kern/flash/streamed", f"{flash_bytes/1e6:.0f}", "MB", "q+k+v bf16")
+    emit("kern/flash/traffic_ratio", f"{logits_bytes/flash_bytes:.1f}", "x", "")
+
+
+def ssd_traffic():
+    B, L, H, P, N, Q = 1, 4096, 64, 64, 128, 256
+    f32 = 4
+    ref_decay = B * (L // Q) * Q * Q * H * f32  # per-chunk decay, all chunks
+    kern_live = Q * Q * 8 * f32                 # one chunk x head-block in VMEM
+    emit("kern/ssd/ref_decay_total", f"{ref_decay/1e9:.2f}", "GB", f"L={L}")
+    emit("kern/ssd/kernel_vmem_live", f"{kern_live/1e6:.2f}", "MB", "hb=8")
+
+
+def dispatch_traffic():
+    T_, E = 1_048_576, 64
+    i32 = 4
+    ref_cumsum = T_ * (E + 1) * i32 * 2  # [T,E] onehot + cumsum read/write
+    kern_bytes = T_ * i32 * 2 + E * i32  # dest in, slot out, counters in VMEM
+    emit("kern/dispatch/ref_bytes", f"{ref_cumsum/1e9:.2f}", "GB", "olmoe train cell")
+    emit("kern/dispatch/kernel_bytes", f"{kern_bytes/1e6:.1f}", "MB", "")
+    emit("kern/dispatch/traffic_ratio", f"{ref_cumsum/kern_bytes:.0f}", "x", "")
+
+
+def correctness_spot():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 4, 256, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 256, 64))
+    from repro.kernels.flash_attention import flash_attention
+
+    out = flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.abs(out - want).max())
+    emit("kern/flash/max_abs_err", f"{err:.2e}", "", "f32 256x256")
+
+
+def run():
+    flash_traffic()
+    ssd_traffic()
+    dispatch_traffic()
+    correctness_spot()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Paper Fig 3 / Fig 11 analogue: scale-out behaviour per transport.
+
+The paper's experiment: fix the dataset, add servers, compare GbE vs
+IPoIB-TCP vs RDMA+scheduling.  The TPU rendition models one TPC-H-like
+shuffle-heavy query (Q17 volumes from bench_tpch) across cluster sizes for
+three transports:
+
+* ``gbe``      — 0.125 GB/s links, unscheduled (contention),
+* ``ib_tcp``   — 4 GB/s links, unscheduled + per-byte CPU overhead
+  (the paper's 100-190 % core utilisation -> compute stolen from the query),
+* ``ib_rdma``  — 4 GB/s links, round-robin scheduled, ~4 % CPU overhead.
+
+Speedup is vs 1 server with local compute time fixed per tuple — the same
+presentation as Fig 3 (their numbers: GbE 0.17x, RDMA+sched 3.5x at n=6).
+"""
+
+from repro.core import topology as T
+from .common import emit
+
+COMPUTE_S = 1.0           # single-node compute time for the query
+SHUFFLE_BYTES = 0.6e9     # bytes a full shuffle moves at SF 100 (Q17-ish)
+TCP_CPU_PER_GB = 0.45     # seconds of core time stolen per GB (paper's 190 %)
+
+
+def query_time(n: int, link_gbps: float, scheduled: bool, cpu_per_gb: float) -> float:
+    compute = COMPUTE_S / n
+    if n == 1:
+        return compute
+    per_pair = SHUFFLE_BYTES / n / max(n - 1, 1)
+    link_bw = link_gbps * 1e9
+    net = (n - 1) * per_pair / link_bw
+    if not scheduled:
+        net /= T.contention_factor(n)
+    cpu = cpu_per_gb * (SHUFFLE_BYTES / n) / 1e9
+    return compute + net + cpu
+
+
+def run():
+    for n in (1, 2, 3, 4, 5, 6, 8, 16, 64, 256):
+        base = query_time(1, 4, True, 0)
+        for name, gbps, sched, cpu in (
+            ("gbe", 0.125, False, TCP_CPU_PER_GB),
+            ("ib_tcp", 4.0, False, TCP_CPU_PER_GB),
+            ("ib_rdma_sched", 4.0, True, 0.02),
+            ("tpu_ici_sched", 50.0, True, 0.0),
+        ):
+            s = base / query_time(n, gbps, sched, cpu)
+            emit(f"fig3/speedup_{name}", f"{s:.2f}", "x", f"n={n}")
+    emit("fig3/paper_claim", "3.5", "x", "RDMA+sched at n=6 (paper)")
+    emit("fig3/paper_claim_gbe", "0.17", "x", "GbE at n=6 (paper ~6x slower)")
+
+
+if __name__ == "__main__":
+    run()

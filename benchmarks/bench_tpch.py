@@ -1,0 +1,101 @@
+"""Paper Table 2 analogue: TPC-H query runtimes on the JAX engine.
+
+Runs Q1 / Q6 / Q17 / Q3 single-device (jit wall time on this host) and
+verifies each against the numpy oracle; the distributed 8-shard versions
+run in the multi-device subprocess (same engine, exchange plans) — wall
+time on fake CPU devices is NOT a network measurement, so the distributed
+section reports bytes shuffled (the paper's "data shuffled" row) instead.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.relational import datagen, oracle, queries
+from .common import emit, time_jit
+
+SF = 0.02
+
+
+def run():
+    tabs = datagen.gen_all(SF)
+    li, part = tabs["lineitem"], tabs["part"]
+    cust, orders = tabs["customer"], tabs["orders"]
+
+    q1 = jax.jit(lambda t, v: queries.q1_local(
+        type(li)(t, v, li.dictionaries), 90))
+    t = time_jit(q1, li.columns, li.valid)
+    got = queries.q1_finalize(q1(li.columns, li.valid))
+    want = oracle.q1_oracle(li)
+    ok = all(
+        np.allclose(np.asarray(got[k]), want[k], rtol=1e-4) for k in want
+    )
+    emit("tpch/q1", f"{t*1e3:.2f}", "ms", f"SF={SF} correct={ok}")
+
+    q6 = jax.jit(lambda t, v: queries.q6_local(type(li)(t, v, li.dictionaries)))
+    t = time_jit(q6, li.columns, li.valid)
+    ok = np.allclose(float(q6(li.columns, li.valid)), oracle.q6_oracle(li), rtol=1e-4)
+    emit("tpch/q6", f"{t*1e3:.2f}", "ms", f"SF={SF} correct={ok}")
+
+    q17 = jax.jit(
+        lambda lc, lv, pc, pv: queries.q17_local(
+            type(li)(lc, lv, li.dictionaries), type(part)(pc, pv, part.dictionaries)
+        )
+    )
+    t = time_jit(q17, li.columns, li.valid, part.columns, part.valid)
+    ok = np.allclose(
+        float(q17(li.columns, li.valid, part.columns, part.valid)),
+        oracle.q17_oracle(li, part), rtol=1e-3,
+    )
+    emit("tpch/q17", f"{t*1e3:.2f}", "ms", f"SF={SF} correct={ok}")
+
+    q3 = jax.jit(
+        lambda cc, cv, oc, ov, lc, lv: queries.q3_local(
+            type(li)(cc, cv), type(li)(oc, ov), type(li)(lc, lv)
+        )["revenue"]
+    )
+    t = time_jit(q3, cust.columns, cust.valid, orders.columns, orders.valid,
+                 li.columns, li.valid)
+    emit("tpch/q3", f"{t*1e3:.2f}", "ms", f"SF={SF}")
+
+    q14 = jax.jit(
+        lambda lc, lv, pc, pv: queries.q14_finalize(
+            *queries.q14_local(
+                type(li)(lc, lv, li.dictionaries), type(part)(pc, pv, part.dictionaries)
+            )
+        )
+    )
+    t = time_jit(q14, li.columns, li.valid, part.columns, part.valid)
+    ok = np.allclose(
+        float(q14(li.columns, li.valid, part.columns, part.valid)),
+        oracle.q14_oracle(li, part), rtol=1e-3,
+    )
+    emit("tpch/q14", f"{t*1e3:.2f}", "ms", f"SF={SF} correct={ok}")
+
+    q19 = jax.jit(
+        lambda lc, lv, pc, pv: queries.q19_local(
+            type(li)(lc, lv, li.dictionaries), type(part)(pc, pv, part.dictionaries)
+        )
+    )
+    t = time_jit(q19, li.columns, li.valid, part.columns, part.valid)
+    ok = np.allclose(
+        float(q19(li.columns, li.valid, part.columns, part.valid)),
+        oracle.q19_oracle(li, part), rtol=1e-3,
+    )
+    emit("tpch/q19", f"{t*1e3:.2f}", "ms", f"SF={SF} correct={ok}")
+
+    # ---- "data shuffled" row (paper Table 2): bytes each plan exchanges ----
+    n = 16
+    li_rows = int(li.num_valid())
+    row_q17 = 3 * 4  # partkey, quantity, extendedprice (int32)
+    part_rows = int(part.num_valid())
+    emit("tpch/q17_shuffle_bytes", li_rows * row_q17, "B",
+         f"partition lineitem over {n} units")
+    emit("tpch/q17_broadcast_bytes", part_rows * 3 * 4 * (n - 1), "B",
+         "part broadcast (hybrid: once per remote unit)")
+    emit("tpch/q1_shuffle_bytes", 6 * 6 * 4 * n, "B",
+         "pre-aggregated group table only")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: timing, CSV emission."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_jit(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds of a jit'd callable (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, value, unit: str = "", note: str = ""):
+    print(f"{name},{value},{unit},{note}")
+
+
+__all__ = ["time_jit", "emit"]

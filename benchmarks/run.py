@@ -1,0 +1,67 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig10|skew|conn|tpch|fig3|fig12|kern|roofline]
+
+Emits ``name,value,unit,note`` CSV lines.  The roofline section reads the
+dry-run artifacts (run ``python -m repro.launch.dryrun`` first).
+"""
+
+import argparse
+
+from . import (
+    bench_connections,
+    bench_exchange,
+    bench_kernels,
+    bench_scaling,
+    bench_schedule,
+    bench_skew,
+    bench_tpch,
+)
+
+SECTIONS = {
+    "fig10": bench_schedule.run,     # Fig 10(b)/(c): scheduling vs contention
+    "skew": bench_skew.run,          # \u00a73.1 skew table
+    "conn": bench_connections.run,   # \u00a73.1 connection/buffer scaling
+    "tpch": bench_tpch.run,          # Table 2: query runtimes + shuffle bytes
+    "fig3": bench_scaling.run,       # Fig 3/11: scale-out per transport
+    "fig12": bench_exchange.run,     # Fig 5/12(b) + MoE exchange A/B
+    "kern": bench_kernels.run,       # kernel traffic models
+}
+
+
+def roofline():
+    import glob
+    import json
+
+    from repro.launch.roofline import format_table, from_artifact
+
+    rows = []
+    art_dir = "artifacts/dryrun_final" if glob.glob("artifacts/dryrun_final/*.json") else "artifacts/dryrun_v2"
+    for f in sorted(glob.glob(art_dir + "/*.json")):
+        art = json.load(open(f))
+        if art.get("status") == "ok" and not art.get("tag"):
+            rows.append(from_artifact(art))
+    if rows:
+        order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+        rows.sort(key=lambda r: (r.mesh, r.arch, order[r.shape]))
+        print(format_table(rows))
+    else:
+        print("roofline: no artifacts found (run repro.launch.dryrun first)")
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default="all")
+    args = p.parse_args()
+    print("name,value,unit,note")
+    for name, fn in SECTIONS.items():
+        if args.only in ("all", name):
+            print(f"# --- {name} ---")
+            fn()
+    if args.only in ("all", "roofline"):
+        print("# --- roofline (from dry-run artifacts) ---")
+        roofline()
+
+
+if __name__ == "__main__":
+    main()

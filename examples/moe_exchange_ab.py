@@ -1,0 +1,53 @@
+"""A/B the paper's scheduled exchange inside a real MoE layer (8 devices).
+
+    python examples/moe_exchange_ab.py
+
+Runs the expert-parallel dispatch with (a) the round-robin phase schedule
+(paper), (b) the one-factorization schedule, and (c) XLA's monolithic
+all-to-all, verifying all three produce identical outputs, and prints the
+per-variant collective op mix from the compiled HLO.
+"""
+
+import os, sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshContext, default_rules, mesh_context
+from repro.launch.hlo_cost import analyze
+from repro.launch.mesh import make_test_mesh
+from repro.models import moe as M
+
+
+def main():
+    cfg = ModelConfig(
+        name="ab", family="moe", num_layers=1, d_model=64, num_heads=4,
+        num_kv_heads=4, d_ff=128, vocab_size=64, num_experts=32, top_k=4,
+        moe_d_ff=96, capacity_factor=4.0, dtype="float32", moe_impl="ep_shardmap",
+    )
+    params = M.init_moe_layer(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (512, cfg.d_model))
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    outs = {}
+    for impl in ("round_robin", "one_factorization", "xla"):
+        c = cfg.scaled(exchange_impl=impl)
+        ctx = MeshContext(mesh=mesh, rules=default_rules(False),
+                          exchange_axis="model", exchange_impl=impl)
+        with mesh_context(ctx):
+            fn = jax.jit(lambda p, x: M.moe_ep(p, c, x))
+            outs[impl] = np.asarray(fn(params, x))
+            cost = analyze(fn.lower(params, x).compile().as_text())
+        mix = {k: f"{v/1e6:.2f}MB" for k, v in cost["collective_bytes"].items()}
+        print(f"{impl:18s} collectives: {mix}")
+    np.testing.assert_allclose(outs["round_robin"], outs["xla"], rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(outs["one_factorization"], outs["xla"], rtol=2e-4, atol=1e-5)
+    print("all three transports produce identical expert outputs ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Fault-tolerant sharded checkpointing with elastic restore."""
+
+from .ckpt import (
+    save_checkpoint,
+    restore_checkpoint,
+    latest_step,
+    CheckpointManager,
+)
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "CheckpointManager",
+]

@@ -1,0 +1,41 @@
+"""Core: the paper's contribution as composable JAX modules.
+
+- ``schedule``    — round-robin conflict-free phase schedules (Fig 10a)
+- ``exchange``    — decoupled exchange operators over shard_map collectives
+- ``multiplexer`` — per-mesh communication policy (the RDMA multiplexer)
+- ``hybrid``      — hybrid-parallelism planner + paper cost model (§3.1)
+- ``topology``    — v5e roofline constants + switch-contention simulator
+- ``skew``        — Zipf partition-skew analysis + salting (§3.1)
+"""
+
+from . import exchange, hybrid, multiplexer, schedule, skew, topology
+from .exchange import (
+    all_to_all,
+    broadcast_exchange,
+    hash_shuffle,
+    hierarchical_psum_tree,
+    scheduled_all_to_all,
+    xla_all_to_all,
+)
+from .multiplexer import CommMultiplexer, make_multiplexer
+from .schedule import Schedule, make_schedule, verify_schedule
+
+__all__ = [
+    "exchange",
+    "hybrid",
+    "multiplexer",
+    "schedule",
+    "skew",
+    "topology",
+    "all_to_all",
+    "broadcast_exchange",
+    "hash_shuffle",
+    "hierarchical_psum_tree",
+    "scheduled_all_to_all",
+    "xla_all_to_all",
+    "CommMultiplexer",
+    "make_multiplexer",
+    "Schedule",
+    "make_schedule",
+    "verify_schedule",
+]

@@ -1,0 +1,325 @@
+"""Decoupled exchange operators as JAX collectives (paper §3.2).
+
+The paper replaces the classic Volcano exchange operator with *decoupled*
+exchange operators that only talk to a per-server communication multiplexer,
+which in turn performs an all-to-all shuffle over ``n - 1`` conflict-free
+round-robin phases (§3.2.3).  This module is the JAX/TPU rendition:
+
+* a *parallel unit* is a device along one mesh axis (inside ``shard_map``),
+* a *message* is the per-destination chunk of a device-local array,
+* a *phase* is a ``jax.lax.ppermute`` whose permutation is one phase of a
+  :class:`repro.core.schedule.Schedule` — a cyclic shift routes along
+  disjoint torus links, so no link is shared within a phase, which is
+  exactly the property the paper's switch scheduling establishes,
+* the *message pool / zero-copy* discipline becomes buffer donation and the
+  ping-pong accumulation of :func:`scheduled_all_to_all_consume` (process
+  each message as it arrives instead of materializing all of them — the
+  paper's workers do the same with incoming tuples).
+
+Everything here must be called inside ``shard_map`` (a named mesh axis in
+scope).  The pjit/auto-sharded layers above call these through
+:mod:`repro.core.multiplexer`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Literal
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .schedule import Schedule, make_schedule
+
+AllToAllImpl = Literal["xla", "round_robin", "one_factorization"]
+
+
+# ----------------------------------------------------------------------------
+# All-to-all.
+# ----------------------------------------------------------------------------
+
+def xla_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
+    """Baseline: XLA's monolithic all-to-all (the 'unscheduled' transport).
+
+    ``x[j]`` (leading dim = axis size) is the chunk destined for device ``j``;
+    the result's ``y[j]`` is the chunk received from device ``j``.
+    """
+    n = lax.axis_size(axis_name)
+    assert x.shape[0] == n, f"leading dim {x.shape[0]} != axis size {n}"
+    return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
+
+
+def _phase_tables(schedule: Schedule):
+    """Static per-phase (targets_by_src, sources_by_dst) lookup arrays."""
+    tgt, src = [], []
+    for phase in schedule.phases:
+        t = [0] * schedule.n
+        s = [0] * schedule.n
+        for a, b in phase:
+            t[a] = b
+            s[b] = a
+        tgt.append(t)
+        src.append(s)
+    return jnp.asarray(tgt, jnp.int32), jnp.asarray(src, jnp.int32)
+
+
+def scheduled_all_to_all(
+    x: jax.Array,
+    axis_name: str,
+    schedule: str = "shift",
+) -> jax.Array:
+    """The paper's phased round-robin all-to-all (Fig 10a) via ppermute.
+
+    Same contract as :func:`xla_all_to_all` but decomposed into ``n - 1``
+    conflict-free permutation phases.  Each phase of the default ``shift``
+    schedule is a cyclic shift ``i -> i + k``, which a torus routes over
+    link-disjoint paths; the XLA async scheduler may overlap consecutive
+    phases' DMAs with unrelated compute.
+    """
+    n = lax.axis_size(axis_name)
+    assert x.shape[0] == n, f"leading dim {x.shape[0]} != axis size {n}"
+    if n == 1:
+        return x
+    sched = make_schedule(n, schedule)
+    me = lax.axis_index(axis_name)
+    tgt_tab, src_tab = _phase_tables(sched)
+
+    # Own chunk stays put: y[me] = x[me].
+    own = lax.dynamic_slice_in_dim(x, me, 1, axis=0)
+    y = lax.dynamic_update_slice_in_dim(jnp.zeros_like(x), own, me, axis=0)
+
+    for k in range(sched.num_phases):
+        send_to = tgt_tab[k, me]  # who I send to this phase
+        recv_from = src_tab[k, me]  # who I receive from this phase
+        chunk = lax.dynamic_slice_in_dim(x, send_to, 1, axis=0)
+        got = lax.ppermute(chunk, axis_name, sched.phase_permutation(k))
+        # The chunk I got came from `recv_from` and was destined for me.
+        y = lax.dynamic_update_slice_in_dim(y, got, recv_from, axis=0)
+    return y
+
+
+def all_to_all(
+    x: jax.Array, axis_name: str, impl: AllToAllImpl = "round_robin"
+) -> jax.Array:
+    """Dispatcher: the communication multiplexer's shuffle entry point."""
+    if impl == "xla":
+        return xla_all_to_all(x, axis_name)
+    if impl == "round_robin":
+        return scheduled_all_to_all(x, axis_name, schedule="shift")
+    if impl == "one_factorization":
+        return scheduled_all_to_all(x, axis_name, schedule="one_factorization")
+    raise ValueError(f"unknown all_to_all impl {impl!r}")
+
+
+def scheduled_all_to_all_consume(
+    x: jax.Array,
+    axis_name: str,
+    consume: Callable[[Any, jax.Array, jax.Array], Any],
+    init: Any,
+    schedule: str = "shift",
+) -> Any:
+    """Streaming shuffle: fold each message as it arrives (paper §3.2 step 5-7).
+
+    ``consume(acc, chunk, src_index) -> acc`` is applied to the device's own
+    chunk first, then to each received chunk phase by phase.  Because the
+    accumulator does not depend on later phases' sends, XLA can overlap the
+    phase ``k+1`` ppermute with the phase ``k`` consume — the TPU analogue of
+    the paper's multiplexer notifying workers to process messages right away
+    instead of waiting for the full shuffle.  Avoids materializing the
+    ``[n, ...]`` receive buffer (the message pool is one chunk deep).
+    """
+    n = lax.axis_size(axis_name)
+    assert x.shape[0] == n
+    me = lax.axis_index(axis_name)
+    own = lax.dynamic_slice_in_dim(x, me, 1, axis=0)
+    acc = consume(init, own[0], me)
+    if n == 1:
+        return acc
+    sched = make_schedule(n, schedule)
+    tgt_tab, src_tab = _phase_tables(sched)
+    for k in range(sched.num_phases):
+        send_to = tgt_tab[k, me]
+        recv_from = src_tab[k, me]
+        chunk = lax.dynamic_slice_in_dim(x, send_to, 1, axis=0)
+        got = lax.ppermute(chunk, axis_name, sched.phase_permutation(k))
+        acc = consume(acc, got[0], recv_from)
+    return acc
+
+
+# ----------------------------------------------------------------------------
+# Broadcast exchange (paper §3.1: broadcast joins; §3.2.1 retain counter).
+# ----------------------------------------------------------------------------
+
+def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
+    """Broadcast exchange: every device ends with all ``n`` chunks.
+
+    Ring algorithm = ``n - 1`` single-shift phases, each conflict-free; total
+    volume per device is ``(n-1) * |x|`` — the hybrid model's "send once per
+    remote server" (vs ``n*t - 1`` sends under classic exchange).  Result
+    ``y[j]`` is device ``j``'s chunk.
+    """
+    n = lax.axis_size(axis_name)
+    me = lax.axis_index(axis_name)
+    y = jnp.zeros((n,) + x.shape, x.dtype)
+    y = lax.dynamic_update_slice_in_dim(y, x[None], me, axis=0)
+    if n == 1:
+        return y
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    cur = x
+    for k in range(1, n):
+        cur = lax.ppermute(cur, axis_name, perm)
+        src = (me - k) % n  # after k hops I hold device (me-k)'s chunk
+        y = lax.dynamic_update_slice_in_dim(y, cur[None], src, axis=0)
+    return y
+
+
+def broadcast_exchange(x: jax.Array, axis_name: str, impl: str = "ring") -> jax.Array:
+    if impl == "ring":
+        return ring_all_gather(x, axis_name)
+    if impl == "xla":
+        return lax.all_gather(x, axis_name, axis=0, tiled=False)
+    raise ValueError(f"unknown broadcast impl {impl!r}")
+
+
+# ----------------------------------------------------------------------------
+# Hierarchical collectives (hybrid parallelism for gradient sync).
+# ----------------------------------------------------------------------------
+
+def hierarchical_psum(x: jax.Array, inner_axis: str, outer_axis: str) -> jax.Array:
+    """Two-level all-reduce: RS(inner) -> AR(outer) -> AG(inner).
+
+    The paper's "network in the small vs in the large": the bandwidth-hungry
+    reduce-scatter/all-gather stay on the fast inner network (ICI); only the
+    already-reduced ``1/inner_size`` shard crosses the slow outer network
+    (DCI).  Cross-pod traffic drops by the inner axis size versus a flat
+    all-reduce over both axes.
+
+    ``x``'s leading dim must be divisible by the inner axis size (use
+    :func:`hierarchical_psum_tree` for arbitrary pytrees).
+    """
+    shard = lax.psum_scatter(x, inner_axis, scatter_dimension=0, tiled=True)
+    shard = lax.psum(shard, outer_axis)
+    return lax.all_gather(shard, inner_axis, axis=0, tiled=True)
+
+
+def _pad_to(x: jax.Array, multiple: int) -> jax.Array:
+    pad = (-x.shape[0]) % multiple
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+    return x
+
+
+def hierarchical_psum_tree(tree: Any, inner_axis: str, outer_axis: str) -> Any:
+    """Hierarchical all-reduce of a gradient pytree (flatten-pad-reshape)."""
+
+    def one(leaf: jax.Array) -> jax.Array:
+        flat = leaf.reshape(-1)
+        n = flat.shape[0]
+        inner = lax.axis_size(inner_axis)
+        padded = _pad_to(flat, inner)
+        red = hierarchical_psum(padded, inner_axis, outer_axis)
+        return red[:n].reshape(leaf.shape)
+
+    return jax.tree.map(one, tree)
+
+
+def flat_psum_tree(tree: Any, axis_names: tuple[str, ...]) -> Any:
+    """Baseline: single flat all-reduce over all data axes."""
+    return jax.tree.map(lambda g: lax.psum(g, axis_names), tree)
+
+
+# ----------------------------------------------------------------------------
+# Hash shuffle: the decoupled exchange operator proper (paper §3.2 steps 1-7).
+# ----------------------------------------------------------------------------
+
+def fibonacci_hash(keys: jax.Array) -> jax.Array:
+    """Schema-specialized hash of int keys (stands in for the paper's CRC32).
+
+    The paper hashes join attributes with CRC32 (hardware instruction on
+    x86).  TPUs have no CRC32 unit; a Fibonacci/murmur-style multiply-xor mix
+    gives the same uniformity at pure-VPU cost.  uint32 avalanche mix.
+    """
+    x = keys.astype(jnp.uint32)
+    x ^= x >> 16
+    x = x * jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x = x * jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def pack_by_destination(
+    dest: jax.Array,
+    rows: jax.Array,
+    num_dest: int,
+    capacity: int,
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partition ``rows`` into per-destination message buffers (paper step 2).
+
+    Returns ``(buffers, counts, dropped)`` with ``buffers: [num_dest,
+    capacity, row...]``, ``counts: [num_dest]`` valid rows per buffer and
+    ``dropped``: rows lost to capacity overflow (0 when capacity is sized to
+    the skew bound).  Static shapes throughout — the message pool analogue:
+    fixed-size reusable buffers.
+    """
+    nrows = dest.shape[0]
+    if valid is None:
+        valid = jnp.ones((nrows,), jnp.bool_)
+    dest = jnp.where(valid, dest, num_dest)  # invalid rows -> overflow bucket
+    onehot = jax.nn.one_hot(dest, num_dest + 1, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot  # rank within destination
+    my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
+    counts = jnp.minimum(onehot.sum(axis=0)[:num_dest], capacity)
+    keep = (my_rank < capacity) & valid & (dest < num_dest)
+    slot = jnp.where(keep, dest * capacity + my_rank, num_dest * capacity)
+    flat = jnp.zeros((num_dest * capacity + 1,) + rows.shape[1:], rows.dtype)
+    flat = flat.at[slot].set(jnp.where(keep.reshape((-1,) + (1,) * (rows.ndim - 1)), rows, 0))
+    buffers = flat[:-1].reshape((num_dest, capacity) + rows.shape[1:])
+    dropped = (valid & (dest < num_dest)).sum() - keep.sum()
+    return buffers, counts, dropped
+
+
+def hash_shuffle(
+    keys: jax.Array,
+    rows: jax.Array,
+    axis_name: str,
+    capacity: int,
+    impl: AllToAllImpl = "round_robin",
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full decoupled exchange: partition by key hash, shuffle, reassemble.
+
+    Per device: rows whose ``hash(key) % n == j`` are packed into message
+    ``j`` and shuffled so that afterwards every device holds exactly the rows
+    hashing to its index.  Returns ``(rows_out, valid_out, dropped)`` where
+    ``rows_out: [n * capacity, row...]`` and ``valid_out`` masks real rows.
+    """
+    n = lax.axis_size(axis_name)
+    dest = (fibonacci_hash(keys) % jnp.uint32(n)).astype(jnp.int32)
+    buffers, counts, dropped = pack_by_destination(dest, rows, n, capacity, valid)
+    shuffled = all_to_all(buffers, axis_name, impl=impl)
+    counts_in = all_to_all(counts.reshape(n, 1), axis_name, impl=impl).reshape(n)
+    rows_out = shuffled.reshape((n * capacity,) + shuffled.shape[2:])
+    valid_out = (
+        jnp.arange(capacity)[None, :] < counts_in[:, None]
+    ).reshape(n * capacity)
+    return rows_out, valid_out, lax.psum(dropped, axis_name)
+
+
+__all__ = [
+    "AllToAllImpl",
+    "xla_all_to_all",
+    "scheduled_all_to_all",
+    "scheduled_all_to_all_consume",
+    "all_to_all",
+    "ring_all_gather",
+    "broadcast_exchange",
+    "hierarchical_psum",
+    "hierarchical_psum_tree",
+    "flat_psum_tree",
+    "fibonacci_hash",
+    "pack_by_destination",
+    "hash_shuffle",
+]

@@ -1,0 +1,17 @@
+"""Data pipeline: deterministic synthetic streams + binary token files."""
+
+from .pipeline import (
+    SyntheticLM,
+    TokenFileDataset,
+    Prefetcher,
+    make_batch_iterator,
+    write_token_file,
+)
+
+__all__ = [
+    "SyntheticLM",
+    "TokenFileDataset",
+    "Prefetcher",
+    "make_batch_iterator",
+    "write_token_file",
+]

@@ -1,0 +1,26 @@
+"""Distributed runtime: mesh context, logical-axis sharding rules, fault model.
+
+The paper's hybrid parallelism distinguishes the *network in the small*
+(intra-pod ICI) from the *network in the large* (inter-pod DCI).  This
+package carries that distinction as data: a :class:`MeshContext` names the
+mesh axes per network level and the sharding rules that keep fine-grained
+parallelism (TP/morsels) on the fast level, shuffles on the coarse level.
+"""
+
+from .sharding import (
+    AxisRules,
+    MeshContext,
+    current_mesh_context,
+    mesh_context,
+    logical_sharding,
+    shard,
+)
+
+__all__ = [
+    "AxisRules",
+    "MeshContext",
+    "current_mesh_context",
+    "mesh_context",
+    "logical_sharding",
+    "shard",
+]

@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ``<name>.py`` pairs a ``pl.pallas_call`` (explicit BlockSpec
+VMEM tiling, MXU-aligned block shapes) with a pure-jnp oracle in ``ref.py``;
+``ops.py`` exposes jit'd wrappers that select kernel vs reference (kernels
+run in ``interpret=True`` on CPU — the TPU path is the compile target).
+
+Inventory (DESIGN.md §3):
+
+* ``hash_partition`` — the decoupled exchange operator's partition hot loop
+  (paper §3.2.1): multiply-xor hash + per-destination histogram.
+* ``flash_attention``— blocked causal/GQA attention (prefill path).
+* ``ssd_scan``      — mamba2 SSD chunk kernel (intra-chunk quadratic +
+  chunk-state emission fused in VMEM).
+* ``moe_dispatch``  — capacity-bounded token->expert packing (the message-
+  buffer fill of the MoE exchange).
+"""
+
+__all__ = ["ops", "ref"]  # import submodules explicitly (avoids import cycles)

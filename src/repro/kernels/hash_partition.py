@@ -1,0 +1,62 @@
+"""Exchange-operator partition hot loop — Pallas TPU kernel (paper §3.2.1).
+
+HyPer's decoupled exchange operator hashes each tuple's join key (CRC32 on
+x86) and partitions tuples into per-destination message buffers.  On TPU the
+hash is a multiply-xor avalanche (pure VPU, no CRC unit — DESIGN.md §2) and
+the kernel emits, per block of keys, (a) the destination partition ids and
+(b) a per-block destination histogram.  The histogram tree-combine and the
+actual scatter stay in XLA (dynamic scatter is not an MXU shape), but the
+per-row hashing+binning — the loop the paper code-generates with LLVM — is
+this kernel.  Schema specialization happens at trace time (Pallas kernels
+are shape-specialized), mirroring the paper's generated serialization code.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hash_kernel(keys_ref, pid_ref, hist_ref, *, num_partitions: int, block: int):
+    x = keys_ref[...].astype(jnp.uint32)  # [block]
+    x ^= x >> 16
+    x = x * jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x = x * jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    pid = (x % jnp.uint32(num_partitions)).astype(jnp.int32)
+    pid_ref[...] = pid
+    onehot = (
+        pid[:, None] == jax.lax.broadcasted_iota(jnp.int32, (block, num_partitions), 1)
+    ).astype(jnp.int32)
+    hist_ref[0] = onehot.sum(axis=0)
+
+
+def hash_partition(
+    keys: jax.Array, num_partitions: int, block: int = 256, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """(partition ids [T], per-block histograms [T/block, P])."""
+    T = keys.shape[0]
+    assert T % block == 0, (T, block)
+    nb = T // block
+    kernel = functools.partial(_hash_kernel, num_partitions=num_partitions, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, num_partitions), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((nb, num_partitions), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys)
+
+
+__all__ = ["hash_partition"]

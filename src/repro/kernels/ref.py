@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------------
+# flash_attention oracle.
+# ----------------------------------------------------------------------------
+
+def flash_attention_ref(
+    q: jax.Array,  # [B, H, Sq, D]
+    k: jax.Array,  # [B, KH, Sk, D]
+    v: jax.Array,  # [B, KH, Sk, D]
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    B, H, Sq, D = q.shape
+    KH, Sk = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, KH, G, Sq, D)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", w, v)
+    return out.reshape(B, H, Sq, D)
+
+
+# ----------------------------------------------------------------------------
+# ssd_scan oracle (delegates to the validated pure-jnp chunked scan).
+# ----------------------------------------------------------------------------
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk, initial_state=None):
+    from repro.models.mamba2 import ssd_chunked
+
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk, initial_state, use_kernel=False)
+
+
+# ----------------------------------------------------------------------------
+# hash_partition oracle.
+# ----------------------------------------------------------------------------
+
+def fibonacci_hash_ref(keys: jax.Array) -> jax.Array:
+    x = keys.astype(jnp.uint32)
+    x ^= x >> 16
+    x = x * jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x = x * jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def hash_partition_ref(
+    keys: jax.Array, num_partitions: int, block: int = 256
+) -> tuple[jax.Array, jax.Array]:
+    """(partition ids [T], per-block histogram [T/block, P])."""
+    T = keys.shape[0]
+    assert T % block == 0
+    pid = (fibonacci_hash_ref(keys) % jnp.uint32(num_partitions)).astype(jnp.int32)
+    onehot = jax.nn.one_hot(pid.reshape(T // block, block), num_partitions, dtype=jnp.int32)
+    return pid, onehot.sum(axis=1)
+
+
+# ----------------------------------------------------------------------------
+# moe_dispatch oracle: rank-within-expert + capacity slots.
+# ----------------------------------------------------------------------------
+
+def moe_dispatch_ref(
+    dest: jax.Array, num_dest: int, capacity: int
+) -> tuple[jax.Array, jax.Array]:
+    """(slot [T], counts [num_dest]).
+
+    ``slot[t] = dest[t] * capacity + rank`` if the row fits its destination
+    buffer, else the overflow bin ``num_dest * capacity``.
+    """
+    onehot = jax.nn.one_hot(dest, num_dest, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
+    kept = my_rank < capacity
+    slot = jnp.where(kept, dest * capacity + my_rank, num_dest * capacity)
+    counts = jnp.minimum(onehot.sum(axis=0), capacity)
+    return slot.astype(jnp.int32), counts
+
+
+__all__ = [
+    "flash_attention_ref",
+    "ssd_scan_ref",
+    "fibonacci_hash_ref",
+    "hash_partition_ref",
+    "moe_dispatch_ref",
+]

@@ -1,0 +1,163 @@
+"""Mamba2 SSD chunk scan — Pallas TPU kernel.
+
+Fuses, per (batch, head-block, chunk): the intra-chunk quadratic (the
+"attention form" of SSD), the inter-chunk state read, and the state update —
+all in VMEM, with the running ``[hb, P, N]`` state carried in scratch across
+the sequential chunk axis (TPU grids execute the last axis in order, so the
+scratch *is* the recurrence carry; the HBM round-trip of the per-chunk
+states that the jnp reference makes via ``lax.scan`` disappears).
+
+Layout notes: heads are processed in blocks of ``hb`` so the [Q, Q, hb]
+decay tensor fits VMEM; Q (chunk) and P/N are MXU-aligned.  Single-group
+(G=1) only — every assigned SSM arch uses ngroups=1; the wrapper falls back
+to the reference otherwise.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref,    # [1, 1, Q, hb, P]
+    dt_ref,   # [1, 1, Q, hb]
+    A_ref,    # [1, hb]
+    B_ref,    # [1, 1, Q, N]
+    C_ref,    # [1, 1, Q, N]
+    s0_ref,   # [1, hb, P, N]
+    y_ref,    # out [1, 1, Q, hb, P]
+    fin_ref,  # out [1, hb, P, N]
+    state_ref,  # scratch [hb, P, N] f32
+    *,
+    num_chunks: int,
+    chunk: int,
+):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = s0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0, 0].astype(jnp.float32)    # [Q, hb, P]
+    dt = dt_ref[0, 0].astype(jnp.float32)  # [Q, hb]
+    A = A_ref[0].astype(jnp.float32)       # [hb]
+    Bm = B_ref[0, 0].astype(jnp.float32)   # [Q, N]
+    Cm = C_ref[0, 0].astype(jnp.float32)   # [Q, N]
+
+    a = dt * A[None, :]                    # [Q, hb] log-decay
+    a_cs = jnp.cumsum(a, axis=0)           # inclusive
+
+    # intra-chunk quadratic
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q] (i, j)
+    seg = a_cs[:, None, :] - a_cs[None, :, :]  # [Q, Q, hb]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.exp(jnp.where((ii >= jj)[:, :, None], seg, NEG_INF))
+    m = scores[:, :, None] * decay * dt[None, :, :]          # [Q, Q, hb]
+    # y_intra[i,h,p] = sum_j m[i,j,h] x[j,h,p]  (batch over h)
+    mh = m.transpose(2, 0, 1)                                # [hb, Q, Q]
+    xh = x.transpose(1, 0, 2)                                # [hb, Q, P]
+    y_intra = jax.lax.dot_general(
+        mh, xh, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # [hb, Q, P]
+
+    # inter-chunk read of the entering state
+    st = state_ref[...]                                      # [hb, P, N]
+    y_in = jax.lax.dot_general(
+        Cm, st, (((1,), (2,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, hb, P]
+    y_inter = y_in * jnp.exp(a_cs)[:, :, None]
+    y_ref[0, 0] = (y_intra.transpose(1, 0, 2) + y_inter).astype(y_ref.dtype)
+
+    # state update: S <- exp(a_last) S + sum_j exp(a_last - a_cs[j]) dt_j x_j B_j^T
+    a_last = a_cs[-1]                                        # [hb]
+    w = jnp.exp(a_last[None, :] - a_cs) * dt                 # [Q, hb]
+    xw = (x * w[:, :, None]).transpose(1, 2, 0)              # [hb, P, Q]
+    upd = jax.lax.dot_general(
+        xw, Bm, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [hb, P, N]
+    state_ref[...] = st * jnp.exp(a_last)[:, None, None] + upd
+
+    @pl.when(c == num_chunks - 1)
+    def _finish():
+        fin_ref[0] = state_ref[...]
+
+
+def ssd_scan(
+    x: jax.Array,    # [B, L, H, P]
+    dt: jax.Array,   # [B, L, H] f32
+    A: jax.Array,    # [H] f32
+    Bm: jax.Array,   # [B, L, 1, N]  (G=1)
+    Cm: jax.Array,   # [B, L, 1, N]
+    chunk: int,
+    initial_state: jax.Array | None = None,  # [B, H, P, N]
+    head_block: int = 8,
+    interpret: bool = True,
+):
+    """Returns (y [B,L,H,P], final_state [B,H,P,N])."""
+    B, L, H, P = x.shape
+    N = Bm.shape[-1]
+    assert Bm.shape[2] == 1, "kernel supports ngroups=1; use ref for G>1"
+    assert L % chunk == 0
+    nc = L // chunk
+    hb = min(head_block, H)
+    assert H % hb == 0
+    nh = H // hb
+    if initial_state is None:
+        initial_state = jnp.zeros((B, H, P, N), jnp.float32)
+
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.astype(jnp.float32).reshape(B, nc, chunk, H)
+    Bc = Bm.reshape(B, nc, chunk, N)
+    Cc = Cm.reshape(B, nc, chunk, N)
+    s0 = initial_state.reshape(B, nh, hb, P, N).reshape(B * nh, hb, P, N)
+    # regroup head-block dim for clean BlockSpecs
+    xc = xc.reshape(B, nc, chunk, nh, hb, P).transpose(0, 3, 1, 2, 4, 5).reshape(
+        B * nh, nc, chunk, hb, P
+    )
+    dtc = dtc.reshape(B, nc, chunk, nh, hb).transpose(0, 3, 1, 2, 4).reshape(
+        B * nh, nc, chunk, hb
+    )
+    A_blk = A.astype(jnp.float32).reshape(nh, hb)
+    Bc = jnp.broadcast_to(Bc[:, None], (B, nh, nc, chunk, N)).reshape(B * nh, nc, chunk, N)
+    Cc = jnp.broadcast_to(Cc[:, None], (B, nh, nc, chunk, N)).reshape(B * nh, nc, chunk, N)
+
+    kernel = functools.partial(_ssd_kernel, num_chunks=nc, chunk=chunk)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=(B * nh, 1, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, hb, P), lambda g, z, c: (g, c, 0, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, hb), lambda g, z, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, hb), lambda g, z, c, nh=nh: (g % nh, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda g, z, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda g, z, c: (g, c, 0, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda g, z, c: (g, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, hb, P), lambda g, z, c: (g, c, 0, 0, 0)),
+            pl.BlockSpec((1, hb, P, N), lambda g, z, c: (g, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * nh, nc, chunk, hb, P), x.dtype),
+            jax.ShapeDtypeStruct((B * nh, hb, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hb, P, N), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, A_blk, Bc, Cc, s0)
+
+    y = y.reshape(B, nh, nc, chunk, hb, P).transpose(0, 2, 3, 1, 4, 5).reshape(B, L, H, P)
+    fin = fin.reshape(B, nh, hb, P, N).reshape(B, H, P, N)
+    return y, fin
+
+
+__all__ = ["ssd_scan"]

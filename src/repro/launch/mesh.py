@@ -1,0 +1,55 @@
+"""Production mesh construction (a FUNCTION — importing this module never
+touches jax device state).
+
+Axis semantics (paper mapping, DESIGN.md §2):
+
+* ``pod``   — the network in the LARGE (inter-pod DCI); only coarse
+  data-parallel gradient sync crosses it.
+* ``data``  — intra-pod data parallelism / FSDP shard axis.
+* ``model`` — the network in the SMALL for fine-grained parallelism:
+  TP (heads/d_ff), EP (experts — the paper's exchange runs here), and
+  sequence sharding of decode KV caches.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import AxisRules, MeshContext, default_rules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for the multi-device unit tests (8 fake devices)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_context(
+    *,
+    multi_pod: bool = False,
+    exchange_impl: str = "round_robin",
+    rules: AxisRules | None = None,
+    mesh=None,
+) -> MeshContext:
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    axis_names = mesh.axis_names
+    return MeshContext(
+        mesh=mesh,
+        rules=rules or default_rules("pod" in axis_names),
+        exchange_axis="model",
+        data_axes=tuple(a for a in axis_names if a in ("pod", "data")),
+        pod_axis="pod" if "pod" in axis_names else None,
+        exchange_impl=exchange_impl,
+    )
+
+
+__all__ = ["make_production_mesh", "make_test_mesh", "make_context"]

@@ -1,0 +1,17 @@
+"""The assigned-architecture model zoo (pure JAX, pytree params).
+
+Every model exposes the same functional API through ``registry.build``:
+
+* ``init(rng) -> params``                       (with matching sharding specs)
+* ``train_loss(params, batch) -> scalar``       (teacher-forced xent)
+* ``prefill(params, batch) -> (logits, cache)``
+* ``decode_step(params, tokens, cache, pos) -> (logits, cache)``
+* ``input_specs(shape) -> dict[str, ShapeDtypeStruct]``
+
+Models tag activations with logical axis names (``repro.distributed.shard``)
+and never reference mesh axes; the MoE layers route their expert dispatch
+through :mod:`repro.core.exchange` — the paper's scheduled all-to-all as a
+first-class model feature.
+"""
+
+__all__ = ["registry"]  # import repro.models.registry lazily (avoids cycles)

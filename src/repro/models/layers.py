@@ -1,0 +1,569 @@
+"""Shared neural layers: norms, RoPE/M-RoPE, GQA + MLA attention, MLPs.
+
+Conventions
+-----------
+* params are plain dicts of ``jnp`` arrays; every ``init_*`` has a matching
+  ``specs_*`` returning the same pytree of logical-axis tuples (consumed by
+  ``registry.param_shardings``).
+* activations: ``[batch, seq, d_model]``; attention heads ``[B, S, H, Dh]``.
+* ``positions`` are int32 ``[B, S]`` (RoPE) or ``[3, B, S]`` (M-RoPE).
+* caches are dicts of arrays with a leading layer dim (stacked for scan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+
+Params = Any  # nested dict[str, jax.Array]
+Specs = Any   # same structure, leaves are tuples of logical-axis names
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def he_init(key, shape, fan_in, dtype):
+    return _normal(key, shape, 1.0 / math.sqrt(max(fan_in, 1)), dtype)
+
+
+# ----------------------------------------------------------------------------
+# Norms.
+# ----------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def specs_rmsnorm() -> Specs:
+    return {"scale": (None,)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def specs_layernorm() -> Specs:
+    return {"scale": (None,), "bias": (None,)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+# ----------------------------------------------------------------------------
+# RoPE / M-RoPE.
+# ----------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables ``[..., head_dim/2]`` for int positions ``[...]``."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(
+    positions: jax.Array, head_dim: int, theta: float, sections: tuple[int, int, int]
+) -> tuple[jax.Array, jax.Array]:
+    """Qwen2-VL multimodal RoPE: 3 position streams (t, h, w) feed disjoint
+    frequency sections.  ``positions: [3, B, S]`` -> cos/sin ``[B, S, half]``.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    cos_t, sin_t = rope_angles(positions, head_dim, theta)  # [3, B, S, half]
+    # section id of each frequency index: [half] in {0,1,2}
+    sec = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
+    cos = jnp.take_along_axis(
+        jnp.moveaxis(cos_t, 0, -1), sec[None, None, :, None], axis=-1
+    )[..., 0]
+    sin = jnp.take_along_axis(
+        jnp.moveaxis(sin_t, 0, -1), sec[None, None, :, None], axis=-1
+    )[..., 0]
+    return cos, sin
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate ``x: [B, S, H, Dh]`` with cos/sin ``[B, S, Dh/2]`` (half-split
+    layout, as used by llama/qwen/deepseek)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def positions_for(cfg: ModelConfig, batch: dict) -> jax.Array:
+    """Default position ids from the token grid (overridable via batch)."""
+    if "positions" in batch:
+        return batch["positions"]
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def rope_tables(cfg: ModelConfig, positions: jax.Array, head_dim: int):
+    if cfg.rope_kind == "mrope":
+        return mrope_angles(positions, head_dim, cfg.rope_theta, cfg.mrope_sections)
+    return rope_angles(positions, head_dim, cfg.rope_theta)
+
+
+# ----------------------------------------------------------------------------
+# Scaled-dot-product attention core (masked, GQA-aware).
+# ----------------------------------------------------------------------------
+
+def sdpa(
+    q: jax.Array,       # [B, Sq, H, Dh]
+    k: jax.Array,       # [B, Sk, KH, Dh]
+    v: jax.Array,       # [B, Sk, KH, Dv]
+    *,
+    causal: bool,
+    q_offset: jax.Array | int = 0,  # absolute position of q[:, 0]
+    kv_valid_len: jax.Array | None = None,  # mask k/v positions >= this
+    scale: float | None = None,
+) -> jax.Array:
+    """Reference attention used on every non-kernel path.
+
+    GQA: ``H`` must be a multiple of ``KH``; query heads are grouped.  The
+    softmax runs in f32.  Sk is the (static) cache capacity at decode; the
+    dynamic fill level arrives via ``kv_valid_len``.
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, KH = k.shape[1], k.shape[2]
+    G = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(Dh)
+    qg = q.reshape(B, Sq, KH, G, Dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    mask = jnp.ones((Sq, Sk), jnp.bool_)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos
+    if kv_valid_len is not None:
+        mask = mask & (jnp.arange(Sk)[None, :] < kv_valid_len)
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H, v.shape[-1])
+
+
+def chunked_sdpa(
+    q: jax.Array,       # [B, S, H, Dh]
+    k: jax.Array,       # [B, S, KH, Dh]
+    v: jax.Array,
+    *,
+    causal: bool,
+    q_block: int = 512,
+    scale: float | None = None,
+) -> jax.Array:
+    """Query-block-chunked attention: O(S·q_block) live logits.
+
+    The scan body is checkpointed, so the backward pass recomputes each
+    block's [bq, S] logits instead of storing all S² — a flash-style memory
+    profile in pure jnp (differentiable; the Pallas kernel handles the
+    non-autodiff inference path).
+    """
+    B, S, H, Dh = q.shape
+    bq = min(q_block, S)
+    if S % bq != 0:
+        return sdpa(q, k, v, causal=causal, scale=scale)
+    nq = S // bq
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, Dh), 1, 0)  # [nq, B, bq, H, Dh]
+
+    @jax.checkpoint
+    def body(_, inp):
+        qi, i = inp
+        out = sdpa(qi, k, v, causal=causal, q_offset=i * bq, scale=scale)
+        return None, out
+
+    _, outs = lax.scan(body, None, (qb, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, Dh)
+
+
+def attention_core(
+    cfg: ModelConfig,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+) -> jax.Array:
+    """Select the attention implementation (cfg.attn_impl).
+
+    auto: plain sdpa for short sequences, query-chunked beyond — keeps the
+    logits working set bounded at 32k prefill.  flash: the Pallas kernel
+    (custom_vjp; backward recomputes via the chunked path).
+    """
+    S = q.shape[1]
+    impl = cfg.attn_impl
+    if impl == "auto":
+        impl = "sdpa" if S <= 1024 else "chunked"
+    if impl == "flash":
+        from repro.kernels import ops as kops
+
+        return kops.flash_attention_vjp(q, k, v, causal=causal)
+    if impl == "chunked":
+        return chunked_sdpa(q, k, v, causal=causal, q_block=cfg.attn_q_block)
+    return sdpa(q, k, v, causal=causal)
+
+
+# ----------------------------------------------------------------------------
+# GQA attention block (llama/qwen family).
+# ----------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig) -> Params:
+    d, H, KH, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": he_init(ks[0], (d, H, Dh), d, dt),
+        "wk": he_init(ks[1], (d, KH, Dh), d, dt),
+        "wv": he_init(ks[2], (d, KH, Dh), d, dt),
+        "wo": he_init(ks[3], (H, Dh, d), H * Dh, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), dt)
+        p["bk"] = jnp.zeros((KH, Dh), dt)
+        p["bv"] = jnp.zeros((KH, Dh), dt)
+    return p
+
+
+def specs_attention(cfg: ModelConfig) -> Specs:
+    s = {
+        "wq": ("fsdp", "heads", None),
+        "wk": ("fsdp", "kv_heads", None),
+        "wv": ("fsdp", "kv_heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ("heads", None)
+        s["bk"] = ("kv_heads", None)
+        s["bv"] = ("kv_heads", None)
+    return s
+
+
+def attention_qkv(params: Params, cfg: ModelConfig, x: jax.Array):
+    """Project to q/k/v (+bias) in compute dtype."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    return q, k, v
+
+
+def attention_out(params: Params, x: jax.Array) -> jax.Array:
+    return jnp.einsum("bshk,hkd->bsd", x, params["wo"].astype(x.dtype))
+
+
+def attention_block(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    *,
+    causal: bool = True,
+    use_flash: bool = False,
+) -> jax.Array:
+    """Full-sequence (train/prefill) GQA attention."""
+    q, k, v = attention_qkv(params, cfg, x)
+    if cfg.rope_kind in ("rope", "mrope"):
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    del use_flash  # impl selection lives in cfg.attn_impl (attention_core)
+    o = attention_core(cfg, q, k, v, causal=causal)
+    o = shard(o, "batch", "seq", "heads", None)
+    return attention_out(params, o)
+
+
+def attention_decode(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,            # [B, 1, d]
+    cache_k: jax.Array,      # [B, S, KH, Dh]
+    cache_v: jax.Array,
+    pos: jax.Array,          # scalar int32: write position / context length
+    cos: jax.Array,
+    sin: jax.Array,
+):
+    """One decode step; returns (out, new_cache_k, new_cache_v).
+
+    The KV cache is sharded on its sequence dim (``kv_seq -> model``):
+    flash-decode style — each model shard scores its cache slice and GSPMD
+    combines the sharded softmax (the TPU analogue of the paper's rule that
+    big scans stay on the fast network level).
+    """
+    q, k, v = attention_qkv(params, cfg, x)
+    if cfg.rope_kind in ("rope", "mrope"):
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, 1)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, 1)
+    cache_k = shard(cache_k, "batch", "kv_seq", None, None)
+    cache_v = shard(cache_v, "batch", "kv_seq", None, None)
+    o = sdpa(q, cache_k, cache_v, causal=False, kv_valid_len=pos + 1)
+    return attention_out(params, o), cache_k, cache_v
+
+
+# ----------------------------------------------------------------------------
+# MLA attention (deepseek-v2): low-rank compressed KV cache.
+# ----------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.num_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        # queries: full-rank (v2-lite has no q compression)
+        "wq": he_init(ks[0], (d, H, dn + dr), d, dt),
+        # kv: compress to r (+ shared rope dims), then per-head expand
+        "wkv_a": he_init(ks[1], (d, r + dr), d, dt),
+        "kv_norm": init_rmsnorm(r, dt),
+        "wk_b": he_init(ks[2], (r, H, dn), r, dt),
+        "wv_b": he_init(ks[3], (r, H, dv), r, dt),
+        "wo": he_init(ks[4], (H, dv, d), H * dv, dt),
+    }
+
+
+def specs_mla(cfg: ModelConfig) -> Specs:
+    return {
+        "wq": ("fsdp", "heads", None),
+        "wkv_a": ("fsdp", None),
+        "kv_norm": specs_rmsnorm(),
+        "wk_b": ("fsdp", "heads", None),
+        "wv_b": ("fsdp", "heads", None),
+        "wo": ("heads", None, "fsdp"),
+    }
+
+
+def _mla_qk(params, cfg: ModelConfig, x, cos, sin):
+    """Shared query path + compressed kv path (train and decode)."""
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"].astype(dt))
+    c, k_rope = ckv[..., : cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank :]
+    c = rmsnorm(params["kv_norm"], c, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)  # single shared rope head
+    return q_nope, q_rope, c, k_rope[:, :, 0, :]
+
+
+def _mla_attend_block(params, cfg: ModelConfig, q_nope, q_rope, c, k_rope, *, causal, q_offset=0, kv_valid_len=None):
+    """Attention in the compressed space: absorb wk_b into the query.
+
+    scores = q_nope . (c @ wk_b) + q_rope . k_rope; computing
+    ``q_absorbed = q_nope @ wk_b^T`` instead keeps the cache compressed
+    (this is MLA's trick; same FLOPs order, r-dim contraction).
+    """
+    dt = q_nope.dtype
+    scale = 1.0 / math.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+    q_abs = jnp.einsum("bshn,rhn->bshr", q_nope, params["wk_b"].astype(dt))
+    logits = jnp.einsum("bshr,btr->bhst", q_abs, c)
+    logits = logits + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    logits = logits.astype(jnp.float32) * scale
+    Sq, Sk = logits.shape[2], logits.shape[3]
+    mask = jnp.ones((Sq, Sk), jnp.bool_)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= (jnp.arange(Sq)[:, None] + q_offset)
+    if kv_valid_len is not None:
+        mask = mask & (jnp.arange(Sk)[None, :] < kv_valid_len)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(dt)
+    o_c = jnp.einsum("bhst,btr->bshr", w, c)  # attend over compressed values
+    o = jnp.einsum("bshr,rhv->bshv", o_c, params["wv_b"].astype(dt))
+    return jnp.einsum("bshv,hvd->bsd", o, params["wo"].astype(dt))
+
+
+def _mla_attend(params, cfg: ModelConfig, q_nope, q_rope, c, k_rope, *, causal, q_offset=0, kv_valid_len=None):
+    """Q-block-chunked MLA attention (same memory story as chunked_sdpa)."""
+    Sq = q_nope.shape[1]
+    bq = cfg.attn_q_block
+    if (
+        cfg.attn_impl == "sdpa"
+        or Sq % bq != 0
+        or Sq == bq
+        or (cfg.attn_impl == "auto" and Sq <= max(bq, 1024))
+    ):
+        return _mla_attend_block(
+            params, cfg, q_nope, q_rope, c, k_rope,
+            causal=causal, q_offset=q_offset, kv_valid_len=kv_valid_len,
+        )
+    nq = Sq // bq
+    B = q_nope.shape[0]
+    qn = jnp.moveaxis(q_nope.reshape(B, nq, bq, *q_nope.shape[2:]), 1, 0)
+    qr = jnp.moveaxis(q_rope.reshape(B, nq, bq, *q_rope.shape[2:]), 1, 0)
+
+    @jax.checkpoint
+    def body(_, inp):
+        qni, qri, i = inp
+        out = _mla_attend_block(
+            params, cfg, qni, qri, c, k_rope,
+            causal=causal, q_offset=i * bq + q_offset, kv_valid_len=kv_valid_len,
+        )
+        return None, out
+
+    _, outs = lax.scan(body, None, (qn, qr, jnp.arange(nq)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, -1)
+
+
+def mla_block(params, cfg: ModelConfig, x, cos, sin, *, causal=True):
+    q_nope, q_rope, c, k_rope = _mla_qk(params, cfg, x, cos, sin)
+    return _mla_attend(params, cfg, q_nope, q_rope, c, k_rope, causal=causal)
+
+
+def mla_decode(params, cfg: ModelConfig, x, cache_c, cache_kr, pos, cos, sin):
+    """Decode with the compressed cache: c ``[B,S,r]``, k_rope ``[B,S,dr]``."""
+    q_nope, q_rope, c_new, kr_new = _mla_qk(params, cfg, x, cos, sin)
+    cache_c = lax.dynamic_update_slice_in_dim(cache_c, c_new.astype(cache_c.dtype), pos, 1)
+    cache_kr = lax.dynamic_update_slice_in_dim(cache_kr, kr_new.astype(cache_kr.dtype), pos, 1)
+    cache_c = shard(cache_c, "batch", "kv_seq", None)
+    cache_kr = shard(cache_kr, "batch", "kv_seq", None)
+    out = _mla_attend(
+        params, cfg, q_nope, q_rope, cache_c, cache_kr,
+        causal=False, kv_valid_len=pos + 1,
+    )
+    return out, cache_c, cache_kr
+
+
+# ----------------------------------------------------------------------------
+# MLPs.
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int | None = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.act == "gelu":
+        return {
+            "w_in": he_init(ks[0], (d, f), d, dt),
+            "b_in": jnp.zeros((f,), dt),
+            "w_out": he_init(ks[1], (f, d), f, dt),
+            "b_out": jnp.zeros((d,), dt),
+        }
+    return {
+        "w_gate": he_init(ks[0], (d, f), d, dt),
+        "w_up": he_init(ks[1], (d, f), d, dt),
+        "w_down": he_init(ks[2], (f, d), f, dt),
+    }
+
+
+def specs_mlp(cfg: ModelConfig) -> Specs:
+    if cfg.act == "gelu":
+        return {
+            "w_in": ("fsdp", "d_ff"),
+            "b_in": ("d_ff",),
+            "w_out": ("d_ff", "fsdp"),
+            "b_out": (None,),
+        }
+    return {
+        "w_gate": ("fsdp", "d_ff"),
+        "w_up": ("fsdp", "d_ff"),
+        "w_down": ("d_ff", "fsdp"),
+    }
+
+
+def mlp_block(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    if cfg.act == "gelu":
+        h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dt)) + params["b_in"].astype(dt)
+        h = jax.nn.gelu(h)
+        h = shard(h, "batch", "seq", "d_ff")
+        return jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(dt)) + params["b_out"].astype(dt)
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = shard(h, "batch", "seq", "d_ff")
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"].astype(dt))
+
+
+# ----------------------------------------------------------------------------
+# Embedding / unembedding / loss.
+# ----------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig) -> Params:
+    dt = pdtype(cfg)
+    p = {"table": _normal(key, (cfg.vocab_size, cfg.d_model), 0.02, dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = he_init(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab_size), cfg.d_model, dt
+        )
+    return p
+
+
+def specs_embedding(cfg: ModelConfig) -> Specs:
+    s = {"table": ("vocab", "fsdp")}
+    if not cfg.tie_embeddings:
+        s["unembed"] = ("fsdp", "vocab")
+    return s
+
+
+def embed(params: Params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    x = params["table"].astype(cdtype(cfg))[tokens]
+    return x * jnp.asarray(cfg.emb_scale, x.dtype)
+
+
+def unembed(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    x = x * jnp.asarray(cfg.logits_scale, dt)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["table"].astype(dt))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(dt))
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def xent_loss(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross entropy in f32 (numerically stable)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+__all__ = [k for k in dir() if not k.startswith("_")]

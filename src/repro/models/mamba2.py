@@ -1,0 +1,408 @@
+"""Mamba2 (SSD — state-space duality) blocks and the pure-SSM LM.
+
+The SSD chunked algorithm ("Transformers are SSMs", arXiv:2405.21060):
+sequence split into chunks of ``Q``; within a chunk the recurrence is
+evaluated as a masked attention-like quadratic form (MXU-friendly), across
+chunks a linear recurrence carries the ``[H, P, N]`` state — O(L) total,
+O(1)-state decode.  ``kernels/ssd_scan.py`` provides the Pallas version of
+the intra-chunk quadratic; this module is the reference/fallback and the
+decode path.
+
+Tensor names follow the paper: x ``[B,L,H,P]`` values, dt ``[B,L,H]`` step
+sizes, A ``[H]`` (negative) decay rates, B/C ``[B,L,G,N]`` input/output
+projections (G groups broadcast over H heads).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from . import layers as L
+
+
+def dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_ch = d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return d_inner, nheads, conv_ch
+
+
+# ----------------------------------------------------------------------------
+# Params.
+# ----------------------------------------------------------------------------
+
+def init_mamba_block(key, cfg: ModelConfig) -> Any:
+    d = cfg.d_model
+    d_inner, H, conv_ch = dims(cfg)
+    N, G, K = cfg.ssm_state, cfg.ssm_ngroups, cfg.ssm_conv
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * G * N + H  # z, x, B, C, dt
+    # dt bias: inverse softplus of uniform [1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (H,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    dt_bias = jnp.log(jnp.expm1(jnp.exp(u)))
+    return {
+        "in_proj": L.he_init(ks[0], (d, proj_out), d, dt),
+        "conv_w": L._normal(ks[1], (K, conv_ch), 1.0 / math.sqrt(K), dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(
+            jax.random.uniform(ks[3], (H,), minval=1.0, maxval=16.0)
+        ).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": L.init_rmsnorm(d_inner, dt),
+        "out_proj": L.he_init(jax.random.fold_in(key, 9), (d_inner, d), d_inner, dt),
+    }
+
+
+def specs_mamba_block(cfg: ModelConfig) -> Any:
+    return {
+        "in_proj": ("fsdp", "conv_dim"),
+        "conv_w": (None, "conv_dim"),
+        "conv_b": ("conv_dim",),
+        "dt_bias": ("ssm_heads",),
+        "A_log": ("ssm_heads",),
+        "D": ("ssm_heads",),
+        "gate_norm": L.specs_rmsnorm(),
+        "out_proj": ("conv_dim", "fsdp"),
+    }
+
+
+# ----------------------------------------------------------------------------
+# SSD chunked scan (training/prefill).
+# ----------------------------------------------------------------------------
+
+def ssd_chunked(
+    x: jax.Array,    # [B, Lq, H, P]
+    dt: jax.Array,   # [B, Lq, H]  (already softplus'd, f32)
+    A: jax.Array,    # [H] negative, f32
+    Bm: jax.Array,   # [B, Lq, G, N]
+    Cm: jax.Array,   # [B, Lq, G, N]
+    chunk: int,
+    initial_state: jax.Array | None = None,  # [B, H, P, N]
+    use_kernel: bool = False,
+):
+    """Returns (y [B,Lq,H,P], final_state [B,H,P,N]).  f32 recurrence."""
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        return kops.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, initial_state=initial_state)
+    B_, Lq, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    R = H // G
+    assert Lq % chunk == 0, (Lq, chunk)
+    nc = Lq // chunk
+    f32 = jnp.float32
+
+    # chunk-major layout for the scan: [nc, B, Q, ...]
+    xc = jnp.moveaxis(x.reshape(B_, nc, chunk, G, R, P), 1, 0).astype(f32)
+    dtc = jnp.moveaxis(dt.reshape(B_, nc, chunk, G, R), 1, 0).astype(f32)
+    Bc = jnp.moveaxis(Bm.reshape(B_, nc, chunk, G, N), 1, 0).astype(f32)
+    Cc = jnp.moveaxis(Cm.reshape(B_, nc, chunk, G, N), 1, 0).astype(f32)
+
+    if initial_state is None:
+        s0 = jnp.zeros((B_, G, R, P, N), f32)
+    else:
+        s0 = initial_state.reshape(B_, G, R, P, N).astype(f32)
+
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]  # [Q, Q]
+    A_gr = A.reshape(G, R)
+
+    def chunk_body(s, inp):
+        """One chunk: intra-chunk quadratic + inter-chunk read + state update.
+
+        Processing chunk-by-chunk keeps the [B, Q, Q, G, R] decay tensor
+        transient per step instead of materialized for all chunks at once —
+        the memory profile the Pallas kernel has by construction.
+        """
+        xq, dtq, Bq, Cq = inp  # [B,Q,G,R,P], [B,Q,G,R], [B,Q,G,N] ×2
+        a = dtq * A_gr  # [B,Q,G,R]
+        a_cs = jnp.cumsum(a, axis=1)
+
+        scores = jnp.einsum("bign,bjgn->bgij", Cq, Bq)  # [B,G,Q,Q]
+        seg_log = a_cs[:, :, None] - a_cs[:, None]      # [B,Q,Q,G,R]
+        decay = jnp.exp(
+            jnp.where(causal[None, :, :, None, None], seg_log, -jnp.inf)
+        )
+        m = jnp.einsum("bgij,bijgr,bjgr->bijgr", scores, decay, dtq)
+        y = jnp.einsum("bijgr,bjgrp->bigrp", m, xq)
+
+        # inter-chunk read of the entering state
+        y = y + jnp.einsum("bign,bigr,bgrpn->bigrp", Cq, jnp.exp(a_cs), s)
+
+        # state update
+        a_last = a_cs[:, -1]  # [B,G,R]
+        w = jnp.exp(a_last[:, None] - a_cs) * dtq  # [B,Q,G,R]
+        upd = jnp.einsum("bjgr,bjgn,bjgrp->bgrpn", w, Bq, xq)
+        s = s * jnp.exp(a_last)[..., None, None] + upd
+        return s, y
+
+    final, ys = lax.scan(chunk_body, s0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B_, Lq, H, P)
+    return y.astype(x.dtype), final.reshape(B_, H, P, N)
+
+
+def ssd_step(
+    x: jax.Array,   # [B, H, P]
+    dt: jax.Array,  # [B, H]
+    A: jax.Array,   # [H]
+    Bm: jax.Array,  # [B, G, N]
+    Cm: jax.Array,  # [B, G, N]
+    state: jax.Array,  # [B, H, P, N] f32
+):
+    """Single-token recurrence (decode): O(1) in context length."""
+    B_, H, P = x.shape
+    G = Bm.shape[1]
+    R = H // G
+    f32 = jnp.float32
+    xg = x.reshape(B_, G, R, P).astype(f32)
+    dtg = dt.reshape(B_, G, R).astype(f32)
+    dec = jnp.exp(dtg * A.reshape(G, R))
+    sg = state.reshape(B_, G, R, P, N := state.shape[-1])
+    upd = jnp.einsum("bgr,bgn,bgrp->bgrpn", dtg, Bm.astype(f32), xg)
+    sg = sg * dec[..., None, None] + upd
+    y = jnp.einsum("bgn,bgrpn->bgrp", Cm.astype(f32), sg)
+    return y.reshape(B_, H, P).astype(x.dtype), sg.reshape(B_, H, P, -1)
+
+
+# ----------------------------------------------------------------------------
+# Conv + block plumbing.
+# ----------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_inner, H, _ = dims(cfg)
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(w: jax.Array, b: jax.Array, xBC: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, Lq, ch] with kernel [K, ch]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, k : k + xBC.shape[1], :] * w[k][None, None, :] for k in range(K)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba_block(
+    params: Any,
+    cfg: ModelConfig,
+    x: jax.Array,  # [B, Lq, d_model]
+    initial_state: jax.Array | None = None,
+    return_state: bool = False,
+    use_kernel: bool = False,
+):
+    """Full-sequence mamba2 block (train/prefill)."""
+    d_inner, H, conv_ch = dims(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_head_dim
+    dtype = x.dtype
+    B_, Lq, _ = x.shape
+
+    zxbcdt = jnp.einsum("bld,dk->blk", x, params["in_proj"].astype(dtype))
+    z, xBC, dt_raw = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(params["conv_w"].astype(dtype), params["conv_b"].astype(dtype), xBC)
+    xs, Bm, Cm = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    xs = shard(xs.reshape(B_, Lq, H, P), "batch", "seq", "ssm_heads", None)
+    Bm = Bm.reshape(B_, Lq, G, N)
+    Cm = Cm.reshape(B_, Lq, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    y, final = ssd_chunked(
+        xs, dt, A, Bm, Cm, cfg.ssm_chunk, initial_state, use_kernel=use_kernel
+    )
+    y = y + (params["D"].astype(dtype)[None, None, :, None] * xs)
+    y = y.reshape(B_, Lq, d_inner)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("blk,kd->bld", y, params["out_proj"].astype(dtype))
+    if return_state:
+        conv_state = None
+        if cfg.ssm_conv > 1:
+            # last K-1 *pre-conv* inputs (pad left if Lq < K-1)
+            zxbcdt_tail = zxbcdt[:, -(cfg.ssm_conv - 1) :, :]
+            _, xBC_tail, _ = _split_proj(cfg, zxbcdt_tail)
+            conv_state = xBC_tail
+        return out, {"ssm": final, "conv": conv_state}
+    return out
+
+
+def mamba_block_step(params: Any, cfg: ModelConfig, x: jax.Array, state: Any):
+    """Single-token step: x [B, 1, d_model], state {"ssm", "conv"}."""
+    d_inner, H, conv_ch = dims(cfg)
+    G, N, P = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_head_dim
+    dtype = x.dtype
+    B_ = x.shape[0]
+    K = cfg.ssm_conv
+
+    zxbcdt = jnp.einsum("bld,dk->blk", x, params["in_proj"].astype(dtype))[:, 0]
+    d_zx = d_inner
+    z, xBC_new, dt_raw = (
+        zxbcdt[:, :d_zx],
+        zxbcdt[:, d_zx : 2 * d_inner + 2 * G * N],
+        zxbcdt[:, 2 * d_inner + 2 * G * N :],
+    )
+    # conv over the rolling window [B, K-1, ch] + the new input
+    window = jnp.concatenate([state["conv"], xBC_new[:, None, :]], axis=1)  # [B,K,ch]
+    w = params["conv_w"].astype(dtype)
+    xBC = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(dtype)
+    )
+    new_conv = window[:, 1:, :]
+
+    xs, Bm, Cm = (
+        xBC[:, :d_inner],
+        xBC[:, d_inner : d_inner + G * N],
+        xBC[:, d_inner + G * N :],
+    )
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, new_ssm = ssd_step(
+        xs.reshape(B_, H, P), dt, A, Bm.reshape(B_, G, N), Cm.reshape(B_, G, N),
+        state["ssm"],
+    )
+    y = y + params["D"].astype(dtype)[None, :, None] * xs.reshape(B_, H, P)
+    y = y.reshape(B_, d_inner)
+    y = L.rmsnorm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bk,kd->bd", y, params["out_proj"].astype(dtype))[:, None, :]
+    return out, {"ssm": new_ssm, "conv": new_conv}
+
+
+# ----------------------------------------------------------------------------
+# The pure-SSM LM (mamba2-1.3b): embed -> [norm -> mamba]*L -> norm -> logits.
+# ----------------------------------------------------------------------------
+
+def init(key, cfg: ModelConfig) -> Any:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embedding": L.init_embedding(ks[0], cfg),
+        "layers": jax.vmap(lambda k: {
+            "norm": L.init_rmsnorm(cfg.d_model, L.pdtype(cfg)),
+            "mamba": init_mamba_block(k, cfg),
+        })(layer_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, L.pdtype(cfg)),
+    }
+
+
+def specs(cfg: ModelConfig) -> Any:
+    from .transformer import _stack_specs
+
+    return {
+        "embedding": L.specs_embedding(cfg),
+        "layers": _stack_specs({
+            "norm": L.specs_rmsnorm(),
+            "mamba": specs_mamba_block(cfg),
+        }),
+        "final_norm": L.specs_rmsnorm(),
+    }
+
+
+def _body(cfg: ModelConfig, use_kernel=False):
+    def fwd(x, p):
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        x = x + mamba_block(p["mamba"], cfg, h, use_kernel=use_kernel)
+        return shard(x, "batch", "seq_sp", "d_model"), None
+
+    return fwd
+
+
+def forward(params, cfg: ModelConfig, batch) -> jax.Array:
+    from .transformer import _maybe_remat
+
+    x = L.embed(params["embedding"], cfg, batch["tokens"])
+    x = shard(x, "batch", "seq_sp", "d_model")
+    x, _ = lax.scan(_maybe_remat(_body(cfg), cfg), x, params["layers"])
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    h = forward(params, cfg, batch)
+    logits = L.unembed(params["embedding"], cfg, h)
+    return L.xent_loss(logits, batch["labels"], batch.get("loss_mask"))
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, capacity: int, dtype=None) -> Any:
+    """SSM cache is O(1) in context length (the long_500k story)."""
+    del capacity
+    dtype = dtype or L.cdtype(cfg)
+    d_inner, H, conv_ch = dims(cfg)
+    return {
+        "ssm": jnp.zeros(
+            (cfg.num_layers, batch_size, H, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32,
+        ),
+        "conv": jnp.zeros(
+            (cfg.num_layers, batch_size, cfg.ssm_conv - 1, conv_ch), dtype
+        ),
+    }
+
+
+def cache_specs(cfg: ModelConfig) -> Any:
+    return {
+        "ssm": (None, "batch", "ssm_heads", None, None),
+        "conv": (None, "batch", None, "conv_dim"),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    del pos  # SSM state carries the context; position is implicit
+    x = L.embed(params["embedding"], cfg, tokens)
+
+    def body(x, xs):
+        p, st = xs
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, new_st = mamba_block_step(p["mamba"], cfg, h, st)
+        return x + o, new_st
+
+    x, new_cache = lax.scan(
+        body, x, (params["layers"], cache)
+    )
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], cfg, x)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Run the prompt through the chunked scan, keep per-layer final states."""
+    x = L.embed(params["embedding"], cfg, batch["tokens"])
+
+    def body(x, p):
+        h = L.rmsnorm(p["norm"], x, cfg.norm_eps)
+        o, st = mamba_block(p["mamba"], cfg, h, return_state=True)
+        return x + o, st
+
+    from .transformer import _maybe_remat
+
+    x, states = lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], cfg, x[:, -1:])
+    return logits[:, 0], states
+
+
+__all__ = [
+    "dims",
+    "init_mamba_block",
+    "specs_mamba_block",
+    "ssd_chunked",
+    "ssd_step",
+    "mamba_block",
+    "mamba_block_step",
+    "init",
+    "specs",
+    "forward",
+    "train_loss",
+    "init_cache",
+    "cache_specs",
+    "decode_step",
+    "prefill",
+]

@@ -1,0 +1,246 @@
+"""Mixture-of-Experts layer routed through the paper's exchange machinery.
+
+The mapping (DESIGN.md §4): a token is a *tuple*, the router's expert id is
+the *join key*, per-expert capacity buffers are the *message pool*, and the
+expert-parallel dispatch/combine is the decoupled exchange operator's
+all-to-all — executed by :func:`repro.core.exchange.all_to_all` with either
+the paper's round-robin phase schedule or XLA's monolithic collective
+(``cfg.exchange_impl``).
+
+Three execution paths (``cfg.moe_impl``):
+
+* ``"dense"``  — every device evaluates every expert, weighted combine.
+  Exact (no capacity drops); used for CPU smoke tests and as the oracle in
+  property tests.  With ``experts -> model`` sharding constraints this is
+  also the efficient *decode* path (few tokens, replicate-and-reduce), so
+  ``"gspmd"`` is an alias.
+* ``"ep_shardmap"`` — true expert parallelism: tokens are sharded over the
+  exchange axis, packed into per-expert capacity buffers, shuffled to the
+  expert owners (scheduled all-to-all), batch-matmul'd, shuffled back, and
+  combined.  This is the paper's §3.2 pipeline, steps 1-7.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import exchange
+from repro.distributed.sharding import current_mesh_context, shard
+from . import layers as L
+
+
+# ----------------------------------------------------------------------------
+# Params.
+# ----------------------------------------------------------------------------
+
+def init_moe_layer(key, cfg: ModelConfig) -> Any:
+    d, E, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff or cfg.d_ff
+    dt = L.pdtype(cfg)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L._normal(ks[0], (d, E), 0.02, jnp.float32),  # router in f32
+        "w_gate": L.he_init(ks[1], (E, d, f), d, dt),
+        "w_up": L.he_init(ks[2], (E, d, f), d, dt),
+        "w_down": L.he_init(ks[3], (E, f, d), f, dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], cfg, d_ff=f * cfg.num_shared_experts)
+    return p
+
+
+def specs_moe_layer(cfg: ModelConfig) -> Any:
+    s = {
+        "router": (None, None),
+        "w_gate": ("experts", "expert_fsdp", None),
+        "w_up": ("experts", "expert_fsdp", None),
+        "w_down": ("experts", None, "expert_fsdp"),
+    }
+    if cfg.num_shared_experts:
+        s["shared"] = L.specs_mlp(cfg)
+    return s
+
+
+# ----------------------------------------------------------------------------
+# Router.
+# ----------------------------------------------------------------------------
+
+def route(params, cfg: ModelConfig, x: jax.Array):
+    """Top-k routing -> (weights [T, k] f32, expert ids [T, k] int32)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, cfg.top_k)
+    if cfg.router_norm_topk:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return w, idx.astype(jnp.int32)
+
+
+def _expert_ffn(w_gate, w_up, w_down, x):
+    """Batched per-expert SwiGLU: x [E, C, d] -> [E, C, d]."""
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", x, w_up)
+    return jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, w_down)
+
+
+# ----------------------------------------------------------------------------
+# Dense / GSPMD path (exact; smoke oracle; decode).
+# ----------------------------------------------------------------------------
+
+def moe_dense(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Evaluate all experts for all tokens, combine by router weight.
+
+    With ``experts -> model`` sharding the per-expert compute is model-
+    parallel and the weighted sum contracts the expert dim (XLA inserts the
+    reduce) — the standard replicate-tokens EP used at decode.
+    """
+    T, d = x.shape
+    dt = x.dtype
+    w, idx = route(params, cfg, x)
+    # full [T, E] combine weights (zero where not selected)
+    full_w = jnp.zeros((T, cfg.num_experts), jnp.float32)
+    full_w = jax.vmap(lambda fw, ww, ii: fw.at[ii].add(ww))(full_w, w, idx)
+    g = jnp.einsum("td,edf->tef", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("td,edf->tef", x, params["w_up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tef,efd->ted", h, params["w_down"].astype(dt))
+    return jnp.einsum("ted,te->td", y, full_w.astype(dt))
+
+
+# ----------------------------------------------------------------------------
+# Expert-parallel shard_map path (the paper's exchange pipeline).
+# ----------------------------------------------------------------------------
+
+def _ep_capacity(cfg: ModelConfig, tokens_per_shard: int, num_shards: int) -> int:
+    """Per-expert message-buffer capacity (paper: fixed-size reusable pool)."""
+    fair = tokens_per_shard * cfg.top_k / cfg.num_experts
+    cap = int(math.ceil(cfg.capacity_factor * fair))
+    return max(cap, 4)
+
+
+def _ep_moe_local(params, cfg: ModelConfig, x, axis_name: str):
+    """Per-shard body (inside shard_map, manual over the exchange axis).
+
+    x: [T_loc, d] — this shard's slice of the token stream.
+    """
+    m = lax.axis_size(axis_name)
+    T_loc, d = x.shape
+    E = cfg.num_experts
+    E_loc = E // m
+    assert params["w_gate"].shape[0] == E_loc, "expert weights must be pre-sharded"
+    C = _ep_capacity(cfg, T_loc, m)
+    dt = x.dtype
+
+    w, idx = route(params, cfg, x)  # [T_loc, k]
+
+    # -- step 2: partition tuples into per-expert messages (the message pool).
+    # slot(t, k) = expert * C + arrival rank; overflow beyond C is dropped
+    # (capacity-bounded buffers — the paper's fixed-size reusable messages).
+    flat_dest = idx.reshape(-1)                       # [T_loc * k] expert ids
+    flat_rows = jnp.repeat(x, cfg.top_k, axis=0)      # token copy per choice
+    onehot = jax.nn.one_hot(flat_dest, E, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    my_rank = jnp.take_along_axis(rank, flat_dest[:, None], axis=1)[:, 0]
+    kept = my_rank < C
+    slot = jnp.where(kept, flat_dest * C + my_rank, E * C)  # E*C = dropped bin
+    buffers = jnp.zeros((E * C + 1, d), dt).at[slot].set(
+        jnp.where(kept[:, None], flat_rows, 0)
+    )[:-1]
+    dropped = (~kept).sum()
+
+    # -- step 3: the multiplexer shuffle (scheduled all-to-all over experts'
+    # owner shards).  buffers [E, C, d] -> [m, E_loc * C, d] by owner.
+    send = buffers.reshape(m, E_loc * C, d)
+    recv = exchange.all_to_all(send, axis_name, impl=cfg.exchange_impl)
+    # recv[j] = slice from shard j destined to my local experts.
+    recv = recv.reshape(m, E_loc, C, d).transpose(1, 0, 2, 3).reshape(E_loc, m * C, d)
+
+    # -- steps 5-6: process NUMA-local messages (batched expert FFN).
+    # Expert weights arrive pre-sharded over the exchange axis (in_specs) —
+    # the owner's slice is already local, zero weight traffic.
+    wg, wu, wd = (params[k].astype(dt) for k in ("w_gate", "w_up", "w_down"))
+    out = _expert_ffn(wg, wu, wd, recv)  # [E_loc, m*C, d]
+
+    # -- step 7: return trip through the same schedule.
+    back = out.reshape(E_loc, m, C, d).transpose(1, 0, 2, 3).reshape(m, E_loc * C, d)
+    ret = exchange.all_to_all(back, axis_name, impl=cfg.exchange_impl)
+    ret = ret.reshape(E * C, d)
+    ret = jnp.concatenate([ret, jnp.zeros((1, d), dt)])  # dropped bin reads 0
+
+    # combine: out[t] = sum_k w[t,k] * ret[slot(t,k)]
+    gathered = ret[slot].reshape(T_loc, cfg.top_k, d)
+    y = jnp.einsum("tkd,tk->td", gathered, w.astype(dt))
+    return y, dropped
+
+
+def moe_ep(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Expert-parallel dispatch via shard_map over the exchange axis."""
+    ctx = current_mesh_context()
+    assert ctx is not None, "ep_shardmap requires an active mesh context"
+    axis = ctx.exchange_axis
+    m = ctx.exchange_size
+    T = x.shape[0]
+    if m == 1 or T % m != 0 or T // m == 0 or cfg.num_experts % m != 0:
+        return moe_dense(params, cfg, x)
+
+    def body(params, x):
+        y, _ = _ep_moe_local(params, cfg, x, axis)
+        return y
+
+    # NOTE(§Perf C5/C6, refuted): pre-gathering bf16 expert weights to
+    # axis-local replicas (with_sharding_constraint before the shard_map)
+    # was tried to kill the ~288 GB/chip activation all-reduce that the
+    # data-sharded weight contraction causes — GSPMD responded with
+    # "involuntary full rematerialization" replicate-and-repartition around
+    # the manual region, inflating compute 2.3-6x.  Keeping the storage
+    # sharding; the structural fix is a fully-manual MoE block (all mesh
+    # axes manual) or the Shardy partitioner — see EXPERIMENTS.md §Perf.
+    ep_params = {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")}
+    param_specs = {
+        "router": P(None, None),          # small; replicated over the axis
+        "w_gate": P(axis, None, None),    # experts stay sharded in place
+        "w_up": P(axis, None, None),
+        "w_down": P(axis, None, None),
+    }
+    fn = jax.shard_map(
+        body,
+        mesh=ctx.mesh,
+        in_specs=(param_specs, P(axis, None)),
+        out_specs=P(axis, None),
+        axis_names={axis},
+        check_vma=False,
+    )
+    return fn(ep_params, x)
+
+
+# ----------------------------------------------------------------------------
+# Layer entry point.
+# ----------------------------------------------------------------------------
+
+def moe_ffn(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """The FFN slot of a MoE transformer layer: routed + shared experts."""
+    B, S, d = x.shape
+    tokens = x.reshape(B * S, d)
+    if cfg.moe_impl == "ep_shardmap":
+        y = moe_ep(params, cfg, tokens)
+    else:  # "dense" and "gspmd"
+        y = moe_dense(params, cfg, tokens)
+    y = y.reshape(B, S, d)
+    if cfg.num_shared_experts:
+        y = y + L.mlp_block(params["shared"], cfg, x)
+    return y
+
+
+__all__ = [
+    "init_moe_layer",
+    "specs_moe_layer",
+    "route",
+    "moe_dense",
+    "moe_ep",
+    "moe_ffn",
+]

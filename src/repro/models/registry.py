@@ -1,0 +1,155 @@
+"""Uniform functional API over the model zoo + input specs for the dry-run.
+
+``build(cfg)`` returns a :class:`ModelApi` whose members close over ``cfg``.
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of that (arch × shape) cell — weak-type-correct, shardable, no
+device allocation — plus the matching logical-axis trees used by the
+launcher to build in_shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from . import layers as L
+
+# Number of image-patch positions the VLM stub prepends (qwen2-vl dynamic
+# resolution -> fixed budget here; the frontend itself is out of scope).
+VLM_PATCHES = 1024
+
+
+def _module(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        from . import mamba2 as m
+    elif cfg.family == "hybrid":
+        from . import zamba2 as m
+    elif cfg.family == "encdec":
+        from . import whisper as m
+    else:  # dense / moe / vlm share the transformer stack
+        from . import transformer as m
+    return m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[[Any, dict], jax.Array]
+    prefill: Callable[[Any, dict], tuple[jax.Array, Any]]
+    decode_step: Callable[[Any, jax.Array, Any, jax.Array], tuple[jax.Array, Any]]
+    init_cache: Callable[[int, int], Any]
+    param_specs: Any           # pytree of logical-axis tuples (matches init)
+    cache_spec_fn: Callable[[], Any]
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    m = _module(cfg)
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: m.init(key, cfg),
+        train_loss=lambda params, batch: m.train_loss(params, cfg, batch),
+        prefill=lambda params, batch: m.prefill(params, cfg, batch),
+        decode_step=lambda params, tokens, cache, pos: m.decode_step(
+            params, cfg, tokens, cache, pos
+        ),
+        init_cache=lambda bs, cap: m.init_cache(cfg, bs, cap),
+        param_specs=m.specs(cfg),
+        cache_spec_fn=lambda: m.cache_specs(cfg),
+    )
+
+
+# ----------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins) per (arch × shape).
+# ----------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> tuple[dict, dict]:
+    """(specs, logical_axes) for the batch argument of the step function."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    act = jnp.dtype(cfg.dtype)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            specs = {
+                "frames": _sds((B, S, cfg.d_model), act),
+                "tokens": _sds((B, S), i32),
+            }
+            axes = {
+                "frames": ("batch", "seq", "d_model"),
+                "tokens": ("batch", "seq"),
+            }
+        elif cfg.family == "vlm":
+            P = min(VLM_PATCHES, S // 2)
+            specs = {
+                "tokens": _sds((B, S - P), i32),
+                "patches": _sds((B, P, cfg.d_model), act),
+            }
+            axes = {
+                "tokens": ("batch", "seq"),
+                "patches": ("batch", "seq", "d_model"),
+            }
+        else:
+            specs = {"tokens": _sds((B, S), i32)}
+            axes = {"tokens": ("batch", "seq")}
+        if shape.kind == "train":
+            n_text = specs["tokens"].shape[1]
+            specs["labels"] = _sds((B, n_text), i32)
+            axes["labels"] = ("batch", "seq")
+        return specs, axes
+
+    # decode: one new token per stream against a cache of length S
+    specs = {"tokens": _sds((B, 1), i32)}
+    axes = {"tokens": ("batch", None)}
+    return specs, axes
+
+
+def cache_shape_specs(cfg: ModelConfig, shape: ShapeSpec) -> tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical axes tree) for the decode cache."""
+    m = _module(cfg)
+    tree = jax.eval_shape(lambda: m.init_cache(cfg, shape.global_batch, shape.seq_len))
+    return tree, m.cache_specs(cfg)
+
+
+def param_shape_specs(cfg: ModelConfig) -> tuple[Any, Any]:
+    """(ShapeDtypeStruct tree, logical axes tree) for the params."""
+    m = _module(cfg)
+    tree = jax.eval_shape(lambda: m.init(jax.random.PRNGKey(0), cfg))
+    return tree, m.specs(cfg)
+
+
+# ----------------------------------------------------------------------------
+# Parameter counting (roofline MODEL_FLOPS = 6 * N * D).
+# ----------------------------------------------------------------------------
+
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    tree, specs = param_shape_specs(cfg)
+    flat = jax.tree.leaves_with_path(tree)
+    total = 0
+    for path, leaf in flat:
+        n = leaf.size
+        if active_only and cfg.num_experts:
+            keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if any(k in ("w_gate", "w_up", "w_down") for k in keys) and "ffn" in keys:
+                n = n * cfg.top_k // cfg.num_experts
+        total += n
+    return int(total)
+
+
+__all__ = [
+    "ModelApi",
+    "build",
+    "input_specs",
+    "cache_shape_specs",
+    "param_shape_specs",
+    "param_count",
+    "VLM_PATCHES",
+]

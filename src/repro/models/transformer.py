@@ -1,0 +1,322 @@
+"""Decoder-only transformer stack (dense + MoE families).
+
+One implementation serves minicpm / qwen2.5 / deepseek-67b / qwen1.5 (dense),
+deepseek-v2-lite (MLA + MoE, first layer dense) and olmoe (all-MoE), plus the
+qwen2-vl backbone (M-RoPE + patch-embedding prefix).
+
+The layer stack is a list of *segments* — runs of identical layers scanned
+with ``lax.scan`` over stacked params, so the lowered HLO is O(1) in depth
+(95-layer deepseek compiles as fast as 16-layer olmoe).  Heterogeneous depth
+patterns (deepseek-v2's dense first layer) become multiple segments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from . import layers as L
+from . import moe as M
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str  # "dense" | "moe"
+    count: int
+
+
+def segments_for(cfg: ModelConfig) -> list[Segment]:
+    if cfg.num_experts == 0:
+        return [Segment("dense", cfg.num_layers)]
+    segs = []
+    if cfg.first_dense_layers:
+        segs.append(Segment("dense", cfg.first_dense_layers))
+    segs.append(Segment("moe", cfg.num_layers - cfg.first_dense_layers))
+    return segs
+
+
+# ----------------------------------------------------------------------------
+# Per-layer init/specs.
+# ----------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str) -> Any:
+    ks = jax.random.split(key, 4)
+    attn = (L.init_mla if cfg.attn_kind == "mla" else L.init_attention)(ks[0], cfg)
+    p = {
+        "ln1": L.init_rmsnorm(cfg.d_model, L.pdtype(cfg)),
+        "attn": attn,
+        "ln2": L.init_rmsnorm(cfg.d_model, L.pdtype(cfg)),
+    }
+    if kind == "moe":
+        p["ffn"] = M.init_moe_layer(ks[1], cfg)
+    else:
+        p["ffn"] = L.init_mlp(ks[1], cfg)
+    return p
+
+
+def _specs_layer(cfg: ModelConfig, kind: str) -> Any:
+    attn = (L.specs_mla if cfg.attn_kind == "mla" else L.specs_attention)(cfg)
+    s = {
+        "ln1": L.specs_rmsnorm(),
+        "attn": attn,
+        "ln2": L.specs_rmsnorm(),
+    }
+    s["ffn"] = M.specs_moe_layer(cfg) if kind == "moe" else L.specs_mlp(cfg)
+    return s
+
+
+def _stack_specs(spec_tree: Any) -> Any:
+    """Prepend the (replicated) layer-stacking dim to every leaf spec."""
+    return jax.tree.map(
+        lambda axes: (None,) + tuple(axes),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def init(key, cfg: ModelConfig) -> Any:
+    ks = jax.random.split(key, 2 + len(segments_for(cfg)))
+    params: dict[str, Any] = {"embedding": L.init_embedding(ks[0], cfg)}
+    params["final_norm"] = L.init_rmsnorm(cfg.d_model, L.pdtype(cfg))
+    for i, seg in enumerate(segments_for(cfg)):
+        seg_keys = jax.random.split(ks[2 + i], seg.count)
+        params[f"seg{i}"] = jax.vmap(lambda k: _init_layer(k, cfg, seg.kind))(seg_keys)
+    return params
+
+
+def specs(cfg: ModelConfig) -> Any:
+    s: dict[str, Any] = {
+        "embedding": L.specs_embedding(cfg),
+        "final_norm": L.specs_rmsnorm(),
+    }
+    for i, seg in enumerate(segments_for(cfg)):
+        s[f"seg{i}"] = _stack_specs(_specs_layer(cfg, seg.kind))
+    return s
+
+
+# ----------------------------------------------------------------------------
+# Layer body (shared by train/prefill/decode paths).
+# ----------------------------------------------------------------------------
+
+def _ffn(p, cfg: ModelConfig, kind: str, x):
+    if kind == "moe":
+        return M.moe_ffn(p, cfg, x)
+    return L.mlp_block(p, cfg, x)
+
+
+def _layer_fwd(p, cfg: ModelConfig, kind: str, x, cos, sin):
+    r = jnp.asarray(cfg.residual_scale, x.dtype)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        a = L.mla_block(p["attn"], cfg, h, cos, sin, causal=True)
+    else:
+        a = L.attention_block(p["attn"], cfg, h, cos, sin, causal=True)
+    x = x + r * a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + r * _ffn(p["ffn"], cfg, kind, h)
+    return shard(x, "batch", "seq_sp", "d_model")
+
+
+def _layer_decode(p, cfg: ModelConfig, kind: str, x, cache, pos, cos, sin):
+    r = jnp.asarray(cfg.residual_scale, x.dtype)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        a, c, kr = L.mla_decode(p["attn"], cfg, h, cache["c"], cache["kr"], pos, cos, sin)
+        new_cache = {"c": c, "kr": kr}
+    else:
+        a, ck, cv = L.attention_decode(
+            p["attn"], cfg, h, cache["k"], cache["v"], pos, cos, sin
+        )
+        new_cache = {"k": ck, "v": cv}
+    x = x + r * a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + r * _ffn(p["ffn"], cfg, kind, h)
+    return x, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.nothing_saveable
+        if cfg.remat == "full"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_segments(params, cfg: ModelConfig, x, cos, sin):
+    for i, seg in enumerate(segments_for(cfg)):
+        body = _maybe_remat(
+            lambda h, p, kind=seg.kind: (_layer_fwd(p, cfg, kind, h, cos, sin), None),
+            cfg,
+        )
+        if cfg.scan_layers:
+            x, _ = lax.scan(body, x, params[f"seg{i}"])
+        else:
+            for l in range(seg.count):
+                p_l = jax.tree.map(lambda a: a[l], params[f"seg{i}"])
+                x, _ = body(x, p_l)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# Public API: forward / train_loss / cache / prefill / decode.
+# ----------------------------------------------------------------------------
+
+def _embed_inputs(params, cfg: ModelConfig, batch) -> tuple[jax.Array, jax.Array]:
+    """Token embedding (+ optional VLM patch prefix) and positions."""
+    x = L.embed(params["embedding"], cfg, batch["tokens"])
+    if "patches" in batch:  # qwen2-vl stub frontend: precomputed embeddings
+        patches = batch["patches"].astype(x.dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    x = shard(x, "batch", "seq_sp", "d_model")
+    B, S = x.shape[0], x.shape[1]
+    if "positions" in batch:
+        pos = batch["positions"]
+    else:
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+        if cfg.rope_kind == "mrope":
+            pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return x, pos
+
+
+def forward(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Full-sequence causal forward -> hidden states [B, S, d]."""
+    x, pos = _embed_inputs(params, cfg, batch)
+    cos, sin = L.rope_tables(cfg, pos, _rope_dim(cfg))
+    x = _run_segments(params, cfg, x, cos, sin)
+    return L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+
+def _rope_dim(cfg: ModelConfig) -> int:
+    if cfg.attn_kind == "mla":
+        return cfg.qk_rope_head_dim
+    return cfg.resolved_head_dim
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> jax.Array:
+    h = forward(params, cfg, batch)
+    n_text = batch["tokens"].shape[1]
+    h = h[:, -n_text:]  # VLM: loss over text positions only
+    logits = L.unembed(params["embedding"], cfg, h)
+    return L.xent_loss(logits, batch["labels"], batch.get("loss_mask"))
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, capacity: int, dtype=None) -> Any:
+    dtype = dtype or L.cdtype(cfg)
+    cache: dict[str, Any] = {}
+    for i, seg in enumerate(segments_for(cfg)):
+        if cfg.attn_kind == "mla":
+            cache[f"seg{i}"] = {
+                "c": jnp.zeros((seg.count, batch_size, capacity, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((seg.count, batch_size, capacity, cfg.qk_rope_head_dim), dtype),
+            }
+        else:
+            kh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            cache[f"seg{i}"] = {
+                "k": jnp.zeros((seg.count, batch_size, capacity, kh, hd), dtype),
+                "v": jnp.zeros((seg.count, batch_size, capacity, kh, hd), dtype),
+            }
+    return cache
+
+
+def cache_specs(cfg: ModelConfig) -> Any:
+    """Logical axes for each cache leaf (leading layer dim replicated)."""
+    out: dict[str, Any] = {}
+    for i, seg in enumerate(segments_for(cfg)):
+        if cfg.attn_kind == "mla":
+            out[f"seg{i}"] = {
+                "c": (None, "batch", "kv_seq", None),
+                "kr": (None, "batch", "kv_seq", None),
+            }
+        else:
+            out[f"seg{i}"] = {
+                "k": (None, "batch", "kv_seq", None, None),
+                "v": (None, "batch", "kv_seq", None, None),
+            }
+    return out
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    """One token for every stream: tokens [B, 1] -> (logits [B, vocab], cache)."""
+    x = L.embed(params["embedding"], cfg, tokens)
+    B = x.shape[0]
+    p = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.rope_kind == "mrope":
+        p = jnp.broadcast_to(p[None], (3, B, 1))
+    cos, sin = L.rope_tables(cfg, p, _rope_dim(cfg))
+
+    new_cache = {}
+    for i, seg in enumerate(segments_for(cfg)):
+        def body(x, xs, kind=seg.kind):
+            p_l, cache_l = xs
+            x, new_cache_l = _layer_decode(p_l, cfg, kind, x, cache_l, pos, cos, sin)
+            return x, new_cache_l
+
+        body = _maybe_remat(body, cfg) if False else body  # no remat at decode
+        x, new_cache[f"seg{i}"] = lax.scan(body, x, (params[f"seg{i}"], cache[f"seg{i}"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], cfg, x)
+    return logits[:, 0], new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch):
+    """Process the whole prompt; return last-token logits + filled cache.
+
+    The cache is produced by re-projecting k/v per layer inside the same
+    scan (ys outputs), so prefill costs one forward pass.
+    """
+    x, pos = _embed_inputs(params, cfg, batch)
+    cos, sin = L.rope_tables(cfg, pos, _rope_dim(cfg))
+
+    cache = {}
+    for i, seg in enumerate(segments_for(cfg)):
+        def body(h, p, kind=seg.kind):
+            hn = L.rmsnorm(p["ln1"], h, cfg.norm_eps)
+            if cfg.attn_kind == "mla":
+                q_nope, q_rope, c, kr = L._mla_qk(p["attn"], cfg, hn, cos, sin)
+                a = L._mla_attend(p["attn"], cfg, q_nope, q_rope, c, kr, causal=True)
+                out_cache = {"c": c, "kr": kr}
+            else:
+                q, k, v = L.attention_qkv(p["attn"], cfg, hn)
+                if cfg.rope_kind in ("rope", "mrope"):
+                    q = L.apply_rope(q, cos, sin)
+                    k = L.apply_rope(k, cos, sin)
+                k = shard(k, "batch", "kv_seq", None, None)
+                v = shard(v, "batch", "kv_seq", None, None)
+                a = L.attention_out(p["attn"], L.sdpa(q, k, v, causal=True))
+                out_cache = {"k": k, "v": v}
+            r = jnp.asarray(cfg.residual_scale, h.dtype)
+            h = h + r * a
+            hn = L.rmsnorm(p["ln2"], h, cfg.norm_eps)
+            h = h + r * _ffn(p["ffn"], cfg, kind, hn)
+            return shard(h, "batch", "seq_sp", "d_model"), out_cache
+
+        body = _maybe_remat(body, cfg)
+        x, cache[f"seg{i}"] = lax.scan(body, x, params[f"seg{i}"])
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], cfg, x[:, -1:])
+    return logits[:, 0], cache
+
+
+__all__ = [
+    "Segment",
+    "segments_for",
+    "init",
+    "specs",
+    "forward",
+    "train_loss",
+    "init_cache",
+    "cache_specs",
+    "decode_step",
+    "prefill",
+]

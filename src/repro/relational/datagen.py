@@ -1,0 +1,158 @@
+"""TPC-H-like data generator (dbgen analogue, numpy-deterministic).
+
+Generates the relations the paper's evaluation joins: lineitem, orders,
+customer, part — with TPC-H cardinality ratios per scale factor
+(SF 1 = 6M lineitem rows; we run fractional SFs on CPU).  Strings are
+dictionary-encoded, money is int32 cents (sums accumulate in f32 — see
+operators.sum_where), dates are int32 days since 1992-01-01.
+
+``zipf_partkey`` switches l_partkey from uniform to Zipf(z) — the skew
+experiment of paper §3.1.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .table import Table, from_numpy
+
+# TPC-H cardinalities per scale factor.
+CARD = {
+    "customer": 150_000,
+    "orders": 1_500_000,
+    "lineitem": 6_000_000,  # ~4 per order
+    "part": 200_000,
+    "partsupp": 800_000,
+}
+
+RETURNFLAGS = ["A", "N", "R"]
+LINESTATUS = ["F", "O"]
+MKTSEGMENTS = ["AUTOMOBILE", "BUILDING", "FURNITURE", "HOUSEHOLD", "MACHINERY"]
+BRANDS = [f"Brand#{i}{j}" for i in range(1, 6) for j in range(1, 6)]
+CONTAINERS = [
+    f"{s} {t}"
+    for s in ["SM", "LG", "MED", "JUMBO", "WRAP"]
+    for t in ["CASE", "BOX", "BAG", "JAR", "PKG", "PACK", "CAN", "DRUM"]
+]
+
+DATE_MIN_DAYS = 0  # 1992-01-01
+DATE_MAX_DAYS = 2526  # ~1998-12-01
+
+
+def date_to_days(y: int, m: int, d: int) -> int:
+    """Days since 1992-01-01 (proleptic, numpy datetime arithmetic)."""
+    return int(
+        (np.datetime64(f"{y:04d}-{m:02d}-{d:02d}") - np.datetime64("1992-01-01"))
+        / np.timedelta64(1, "D")
+    )
+
+
+def _zipf_ranks(rng, n: int, domain: int, z: float) -> np.ndarray:
+    """n samples from a Zipf(z) over [0, domain) via inverse-CDF on the pmf."""
+    ranks = np.arange(1, domain + 1, dtype=np.float64)
+    pmf = ranks**-z
+    pmf /= pmf.sum()
+    return rng.choice(domain, size=n, p=pmf)
+
+
+def gen_part(sf: float, seed: int = 1) -> Table:
+    rng = np.random.default_rng(seed)
+    n = max(int(CARD["part"] * sf), 64)
+    return from_numpy(
+        {
+            "p_partkey": np.arange(n, dtype=np.int32),
+            "p_brand": rng.integers(0, len(BRANDS), n).astype(np.int32),
+            "p_container": rng.integers(0, len(CONTAINERS), n).astype(np.int32),
+            "p_retailprice": (
+                90000 + (np.arange(n) % 20001) * 10  # cents, dbgen-like ramp
+            ).astype(np.int32),
+            "p_size": rng.integers(1, 51, n).astype(np.int32),
+        },
+        dictionaries={"p_brand": BRANDS, "p_container": CONTAINERS},
+    )
+
+
+def gen_customer(sf: float, seed: int = 2) -> Table:
+    rng = np.random.default_rng(seed)
+    n = max(int(CARD["customer"] * sf), 64)
+    return from_numpy(
+        {
+            "c_custkey": np.arange(n, dtype=np.int32),
+            "c_mktsegment": rng.integers(0, len(MKTSEGMENTS), n).astype(np.int32),
+        },
+        dictionaries={"c_mktsegment": MKTSEGMENTS},
+    )
+
+
+def gen_orders(sf: float, seed: int = 3) -> Table:
+    rng = np.random.default_rng(seed)
+    n = max(int(CARD["orders"] * sf), 256)
+    ncust = max(int(CARD["customer"] * sf), 64)
+    return from_numpy(
+        {
+            "o_orderkey": np.arange(n, dtype=np.int32),
+            "o_custkey": rng.integers(0, ncust, n).astype(np.int32),
+            "o_orderdate": rng.integers(
+                DATE_MIN_DAYS, DATE_MAX_DAYS - 151, n
+            ).astype(np.int32),
+            "o_shippriority": np.zeros(n, np.int32),
+        }
+    )
+
+
+def gen_lineitem(
+    sf: float, seed: int = 4, zipf_partkey: float | None = None
+) -> Table:
+    rng = np.random.default_rng(seed)
+    n = max(int(CARD["lineitem"] * sf), 1024)
+    norder = max(int(CARD["orders"] * sf), 256)
+    npart = max(int(CARD["part"] * sf), 64)
+    if zipf_partkey:
+        partkey = _zipf_ranks(rng, n, npart, zipf_partkey).astype(np.int32)
+    else:
+        partkey = rng.integers(0, npart, n).astype(np.int32)
+    qty = rng.integers(1, 51, n).astype(np.int32)
+    # extendedprice = qty * part retail-ish price (cents)
+    # extendedprice fits int32: max 50 * 290_000 = 14.5M cents
+    price = (qty.astype(np.int32) * (90000 + (partkey.astype(np.int32) % 2000) * 100))
+    orderdate = rng.integers(DATE_MIN_DAYS, DATE_MAX_DAYS - 151, n)
+    shipdate = (orderdate + rng.integers(1, 122, n)).astype(np.int32)
+    return from_numpy(
+        {
+            "l_orderkey": rng.integers(0, norder, n).astype(np.int32),
+            "l_partkey": partkey,
+            "l_quantity": qty,
+            "l_extendedprice": price,
+            "l_discount": rng.integers(0, 11, n).astype(np.int32),  # percent
+            "l_tax": rng.integers(0, 9, n).astype(np.int32),  # percent
+            "l_returnflag": rng.integers(0, len(RETURNFLAGS), n).astype(np.int32),
+            "l_linestatus": rng.integers(0, len(LINESTATUS), n).astype(np.int32),
+            "l_shipdate": shipdate,
+        },
+        dictionaries={"l_returnflag": RETURNFLAGS, "l_linestatus": LINESTATUS},
+    )
+
+
+def gen_all(sf: float, seed: int = 0, zipf_partkey: float | None = None):
+    return {
+        "part": gen_part(sf, seed + 1),
+        "customer": gen_customer(sf, seed + 2),
+        "orders": gen_orders(sf, seed + 3),
+        "lineitem": gen_lineitem(sf, seed + 4, zipf_partkey),
+    }
+
+
+__all__ = [
+    "CARD",
+    "RETURNFLAGS",
+    "LINESTATUS",
+    "MKTSEGMENTS",
+    "BRANDS",
+    "CONTAINERS",
+    "date_to_days",
+    "gen_part",
+    "gen_customer",
+    "gen_orders",
+    "gen_lineitem",
+    "gen_all",
+]

@@ -1,0 +1,78 @@
+"""Distributed query planner (paper §3.1 / Fig 6).
+
+Implements the two exchange-plan optimizations the paper highlights and the
+hybrid-parallelism decision rule that widens the broadcast window:
+
+* **broadcast vs partition** — broadcast the small join side when it is at
+  most ``broadcast_threshold`` times smaller than the big side; under hybrid
+  parallelism the threshold is ``n - 1`` (vs ``n*t - 1`` classic), so a 6-pod
+  cluster already broadcasts at a 5x size difference (paper: 5x vs 239x).
+* **pre-aggregation** — aggregations with small group domains reduce locally
+  first and exchange only the group table (Q1/Q17's AVG subquery).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+from ..core import hybrid as H
+
+JoinStrategy = Literal["broadcast", "partition"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    num_units: int  # parallel units on the exchange level (devices on axis)
+    threads_per_unit: int = 1  # >1 only to *model* classic exchange
+    hybrid: bool = True
+
+
+def choose_join_strategy(
+    small_rows: int, large_rows: int, cfg: PlannerConfig
+) -> JoinStrategy:
+    """Paper §3.1: broadcast iff  large/small >= units - 1.
+
+    Broadcast cost per unit: (units-1) * small_rows sends.
+    Partition cost per unit: ~ (units-1)/units * (small+large)/units sends.
+    The crossover is large/small ~ units - 1 (paper's formula).
+    """
+    thr = H.broadcast_threshold(
+        cfg.num_units, cfg.threads_per_unit, hybrid=cfg.hybrid
+    )
+    if small_rows == 0:
+        return "broadcast"
+    return "broadcast" if large_rows / small_rows >= thr else "partition"
+
+
+def exchange_bytes(
+    strategy: JoinStrategy,
+    small_rows: int,
+    large_rows: int,
+    row_bytes: int,
+    cfg: PlannerConfig,
+) -> int:
+    """Bytes crossing the network for the chosen strategy (cost model)."""
+    n = cfg.num_units
+    if strategy == "broadcast":
+        return (n - 1) * small_rows * row_bytes
+    # hash partition both sides: each row moves with prob (n-1)/n
+    return int((small_rows + large_rows) * row_bytes * (n - 1) / n)
+
+
+def use_preaggregation(num_groups: int, rows: int, threshold: float = 0.5) -> bool:
+    """Pre-aggregate when the group table is much smaller than the input
+
+    (paper Fig 6c: 'especially for aggregations with a small number of
+    groups').
+    """
+    return num_groups <= rows * threshold
+
+
+__all__ = [
+    "PlannerConfig",
+    "JoinStrategy",
+    "choose_join_strategy",
+    "exchange_bytes",
+    "use_preaggregation",
+]

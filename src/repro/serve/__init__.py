@@ -1,0 +1,5 @@
+"""Serving substrate: batched prefill/decode engine with KV caches."""
+
+from .engine import ServeEngine, Request, sample_token
+
+__all__ = ["ServeEngine", "Request", "sample_token"]

@@ -1,0 +1,135 @@
+"""Batched serving engine: prefill + lock-step decode over KV caches.
+
+Batching model: requests are grouped into fixed-size batches (padded to the
+engine's batch size) and decoded in lock step — every stream appends one
+token per ``decode_step`` against a shared-capacity cache, matching the
+assignment's ``decode_*`` cells ("one new token with a KV cache of
+seq_len").  Finished streams are masked; the batch retires when all finish
+(static batching; the slot map for continuous batching is noted in
+DESIGN.md as the multi-host extension).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import registry
+
+
+def sample_token(key, logits: jax.Array, temperature: float = 0.0) -> jax.Array:
+    """Greedy (t=0) or temperature sampling; logits [B, vocab] -> [B]."""
+    if temperature == 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # int32 [prompt_len]
+    max_new_tokens: int
+    eos_id: int = -1  # -1: never stops early
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Greedy/temperature batched generation over the uniform model API."""
+
+    def __init__(self, api: registry.ModelApi, batch_size: int, capacity: int,
+                 temperature: float = 0.0, seed: int = 0):
+        self.api = api
+        self.cfg = api.cfg
+        self.batch_size = batch_size
+        self.capacity = capacity
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(api.prefill)
+        self._decode = jax.jit(api.decode_step)
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "wall": 0.0}
+
+    def _prefill_batch(self, params, prompts: np.ndarray, extra: dict | None = None):
+        batch = {"tokens": jnp.asarray(prompts)}
+        if extra:
+            batch.update({k: jnp.asarray(v) for k, v in extra.items()})
+        logits, cache = self._prefill(params, batch)
+        self.stats["prefill_tokens"] += int(prompts.size)
+        return logits, cache
+
+    def generate(
+        self,
+        params,
+        requests: list[Request],
+        extra_inputs: dict | None = None,
+    ) -> list[Request]:
+        """Run one static batch of same-length prompts to completion."""
+        t0 = time.perf_counter()
+        assert len(requests) <= self.batch_size
+        plen = requests[0].prompt.shape[0]
+        assert all(r.prompt.shape[0] == plen for r in requests), "bucket by length"
+        B = self.batch_size
+        prompts = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            prompts[i] = r.prompt
+
+        logits, cache = self._prefill_batch(params, prompts, extra_inputs)
+        # prefill produced a prompt-length cache; decode continues into a
+        # capacity-length cache (pad if needed)
+        cache = self._grow_cache(cache, plen)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        tokens = sample_token(self.key, logits, self.temperature)
+        live = np.array([not r.done for r in requests] + [False] * (B - len(requests)))
+        for i, r in enumerate(requests):
+            r.out_tokens.append(int(tokens[i]))
+            if r.max_new_tokens <= 1 or int(tokens[i]) == r.eos_id:
+                r.done = True
+                live[i] = False
+
+        pos = plen
+        for step in range(1, max_new):
+            if pos >= self.capacity or not live.any():
+                break
+            self.key, sub = jax.random.split(self.key)
+            logits, cache = self._decode(params, tokens[:, None], cache, jnp.int32(pos))
+            tokens = sample_token(sub, logits, self.temperature)
+            self.stats["decode_steps"] += 1
+            pos += 1
+            arr = np.asarray(tokens)
+            for i, r in enumerate(requests):
+                if live[i]:
+                    r.out_tokens.append(int(arr[i]))
+                    if len(r.out_tokens) >= r.max_new_tokens or arr[i] == r.eos_id:
+                        r.done = True
+                        live[i] = False
+        for r in requests:
+            r.done = True
+        self.stats["wall"] += time.perf_counter() - t0
+        return requests
+
+    def _grow_cache(self, cache: Any, filled: int) -> Any:
+        """Pad prefill-length cache arrays out to ``self.capacity`` slots.
+
+        Identifies the cache-sequence dim as the one equal to ``filled``
+        in the reference (capacity-sized) cache template.
+        """
+        template = jax.eval_shape(lambda: self.api.init_cache(self.batch_size, self.capacity))
+
+        def grow(leaf, ref):
+            if leaf.shape == ref.shape:
+                return leaf
+            pads = []
+            for have, want in zip(leaf.shape, ref.shape):
+                assert want >= have, (leaf.shape, ref.shape)
+                pads.append((0, want - have))
+            return jnp.pad(leaf, pads)
+
+        return jax.tree.map(grow, cache, template)
+
+
+__all__ = ["ServeEngine", "Request", "sample_token"]

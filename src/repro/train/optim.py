@@ -1,0 +1,108 @@
+"""AdamW (decoupled weight decay) + WSD / cosine learning-rate schedules.
+
+Implemented from scratch (no optax dependency).  Moments are stored in f32
+with the same sharding specs as the parameters — on the production mesh the
+optimizer state is FSDP×TP sharded exactly like the master weights, so the
+update step is fully local (no collective traffic, paper's "keep fine
+work on the fast level" rule applied to the optimizer).
+
+WSD (warmup-stable-decay) is the schedule MiniCPM trains with (assignment
+sheet): linear warmup, long constant plateau, short exponential-ish decay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"  # "cosine" | "wsd" | "constant"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1  # WSD: fraction of steps spent decaying
+
+
+def lr_at(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Schedule value at ``step`` (traceable)."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    if cfg.schedule == "wsd":
+        decay_steps = jnp.maximum(cfg.total_steps * cfg.decay_frac, 1.0)
+        decay_start = cfg.total_steps - decay_steps
+        frac = jnp.clip((s - decay_start) / decay_steps, 0.0, 1.0)
+        # MiniCPM-style: sqrt-shaped anneal to 10 % of peak
+        decay = 1.0 - (1.0 - 0.1) * jnp.sqrt(frac)
+        return cfg.lr * warm * decay
+    # cosine to 10 % of peak
+    frac = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    return cfg.lr * warm * (0.1 + 0.9 * 0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+
+
+def adamw_init(params: Any) -> Any:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    cfg: AdamWConfig, grads: Any, opt_state: Any, params: Any
+) -> tuple[Any, Any, dict]:
+    """One AdamW step; returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_at(cfg, count)
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0  # no decay on norms/biases
+        p32 = p32 - lr * (step + decay * p32)
+        return p32.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics
+
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "lr_at"]

@@ -1,0 +1,149 @@
+"""The jit-able train step: microbatched grad accumulation + AdamW.
+
+Gradient synchronization follows the paper's hybrid two-level policy
+*structurally*: parameters are FSDP-sharded over the ``data`` axis and
+TP-sharded over ``model``, the batch over ``(pod, data)``.  XLA's SPMD
+partitioner then lowers the gradient reduction as reduce-scatter on the
+fast in-pod network + all-reduce of the 1/16-size shards across pods +
+all-gather in-pod — exactly the hierarchical schedule of
+``core.exchange.hierarchical_psum`` (verified from the dry-run HLO in
+EXPERIMENTS.md §Dry-run).  ``grad_sync="hierarchical"`` instead calls the
+explicit shard_map implementation, used for A/B comparison.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import (
+    MeshContext,
+    build_shardings,
+    current_mesh_context,
+)
+from repro.models import registry
+from .optim import AdamWConfig, adamw_init, adamw_update
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: jax.Array  # int32 scalar
+
+    @staticmethod
+    def create(api: registry.ModelApi, key) -> "TrainState":
+        params = api.init(key)
+        return TrainState(params=params, opt=adamw_init(params), step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(api: registry.ModelApi) -> Any:
+    """Logical-axis tree matching TrainState (for shardings/checkpoint)."""
+    p = api.param_specs
+    return TrainState(
+        params=p,
+        opt={"m": p, "v": p, "count": ()},
+        step=(),
+    )
+
+
+def _microbatch(batch: Any, num: int) -> Any:
+    def split(x):
+        B = x.shape[0]
+        assert B % num == 0, f"batch {B} not divisible by {num} microbatches"
+        return x.reshape((num, B // num) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    api: registry.ModelApi,
+    opt_cfg: AdamWConfig,
+) -> Callable[[TrainState, Any], tuple[TrainState, dict]]:
+    """Builds ``step(state, batch) -> (state, metrics)`` (jit it yourself).
+
+    Microbatching: the global batch is split into ``cfg.num_microbatches``
+    slices scanned sequentially, gradients accumulated in f32.  With remat
+    enabled the live activation set is one microbatch × one layer.
+    """
+    cfg = api.cfg
+    num_mb = max(cfg.num_microbatches, 1)
+
+    def loss_fn(params, mb):
+        return api.train_loss(params, mb)
+
+    def _pin(grads):
+        """§Perf: pin gradients to the parameter sharding so XLA lowers the
+        data-parallel reduction as reduce-scatter of shards instead of
+        all-reduce of full replicas (cfg.grad_shard_constraint)."""
+        if not cfg.grad_shard_constraint:
+            return grads
+        from repro.distributed.sharding import is_spec_leaf, logical_sharding
+
+        def one(spec, g):
+            s = logical_sharding(g.shape, *spec)
+            return g if s is None else jax.lax.with_sharding_constraint(g, s)
+
+        return jax.tree.map(one, api.param_specs, grads, is_leaf=is_spec_leaf)
+
+    def step(state: TrainState, batch: Any) -> tuple[TrainState, dict]:
+        if num_mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+            grads = _pin(grads)
+        else:
+            mbs = _microbatch(batch, num_mb)
+
+            def accum(carry, mb):
+                loss_acc, grads_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(state.params, mb)
+                grads = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grads_acc, _pin(grads)
+                )
+                return (loss_acc + loss, _pin(grads)), None
+
+            zero_grads = _pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            ))
+            (loss, grads), _ = jax.lax.scan(accum, (jnp.float32(0), zero_grads), mbs)
+            loss = loss / num_mb
+            grads = jax.tree.map(lambda g: g / num_mb, grads)
+
+        if cfg.grad_sync == "hierarchical":
+            ctx = current_mesh_context()
+            if ctx is not None and ctx.pod_axis is not None:
+                from repro.core.exchange import hierarchical_psum_tree
+                from jax.sharding import PartitionSpec as P
+
+                # explicit two-level sync of the (replicated-view) grads
+                grads = jax.shard_map(
+                    lambda g: hierarchical_psum_tree(g, "data", ctx.pod_axis),
+                    mesh=ctx.mesh,
+                    in_specs=P(),
+                    out_specs=P(),
+                    axis_names={"data", ctx.pod_axis},
+                    check_vma=False,
+                )(grads)
+
+        new_params, new_opt, metrics = adamw_update(opt_cfg, grads, state.opt, state.params)
+        metrics["loss"] = loss
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return step
+
+
+def state_shardings(api: registry.ModelApi, ctx: MeshContext | None = None):
+    """NamedSharding tree for TrainState on the active mesh (None off-mesh)."""
+    ctx = ctx or current_mesh_context()
+    if ctx is None:
+        return None
+    spec_tree = train_state_specs(api)
+    shapes = jax.eval_shape(lambda k: TrainState.create(api, k), jax.random.PRNGKey(0))
+    return build_shardings(spec_tree, shapes, ctx)
+
+
+__all__ = ["TrainState", "train_state_specs", "make_train_step", "state_shardings"]

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# src-layout import path (no global XLA flags here — smoke tests see 1 device;
+# multi-device coverage runs via subprocess, see test_multidevice.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

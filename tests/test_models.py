@@ -1,0 +1,156 @@
+"""Per-arch smoke tests + decode/prefill/forward equivalences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import layers as L
+from repro.models import registry as R
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _batch(cfg, key=KEY):
+    specs, _ = R.input_specs(cfg, C.ShapeSpec("t", S, B, "train"))
+    batch = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            batch[k] = jax.random.randint(jax.random.fold_in(key, 1), s.shape, 0, cfg.vocab_size)
+        else:
+            batch[k] = jax.random.normal(jax.random.fold_in(key, 2), s.shape, s.dtype)
+    return batch
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    """Reduced same-family config: one forward/train step, shapes + no NaNs."""
+    cfg = C.get_smoke_config(arch)
+    api = R.build(cfg)
+    params = api.init(KEY)
+    loss = jax.jit(api.train_loss)(params, _batch(cfg))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), arch
+    grads = jax.grad(api.train_loss)(params, _batch(cfg))
+    gnorm = sum(float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", C.ARCH_IDS)
+def test_arch_smoke_decode_step(arch):
+    cfg = C.get_smoke_config(arch)
+    api = R.build(cfg)
+    params = api.init(KEY)
+    cache = api.init_cache(B, S)
+    toks = jnp.zeros((B, 1), jnp.int32)
+    logits, new_cache = jax.jit(api.decode_step)(params, toks, cache, jnp.int32(3))
+    assert logits.shape == (B, cfg.vocab_size), arch
+    assert np.isfinite(np.asarray(logits)).all(), arch
+    jax.tree.map(lambda a, b: (a.shape, b.shape), cache, new_cache)  # same structure
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2.5-3b", "deepseek-v2-lite-16b", "mamba2-1.3b", "zamba2-7b", "whisper-medium"]
+)
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the teacher-forced forward pass."""
+    cfg = C.get_smoke_config(arch)
+    api = R.build(cfg)
+    params = api.init(KEY)
+    batch = _batch(cfg)
+    toks = batch["tokens"]
+
+    if cfg.family == "encdec":
+        from repro.models import whisper as W
+
+        memory = W.encode(params, cfg, batch["frames"])
+        h = W.decode_train(params, cfg, toks, memory)
+        full = L.unembed(params["embedding"], cfg, h)
+        _, cache = api.prefill(params, {"frames": batch["frames"], "tokens": toks[:, :1]})
+        cache = jax.tree.map(
+            lambda a, b: jnp.pad(a, [(0, w - h2) for h2, w in zip(a.shape, b.shape)]),
+            cache, jax.eval_shape(lambda: api.init_cache(B, toks.shape[1])),
+        )
+        logits = None
+        for t in range(toks.shape[1]):
+            if t == 0:
+                # cache already holds position 0 from the 1-token prefill
+                logits = full[:, 0]
+                continue
+            logits, cache = api.decode_step(params, toks[:, t : t + 1], cache, jnp.int32(t))
+        np.testing.assert_allclose(
+            np.asarray(logits), np.asarray(full[:, -1]), rtol=3e-3, atol=3e-3
+        )
+        return
+
+    mod = R._module(cfg)
+    h = mod.forward(params, cfg, {"tokens": toks})
+    full = L.unembed(params["embedding"], cfg, h)
+    cache = api.init_cache(B, S + 2)
+    logits = None
+    for t in range(toks.shape[1]):
+        logits, cache = api.decode_step(params, toks[:, t : t + 1], cache, jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full[:, -1]), rtol=3e-3, atol=3e-3
+    )
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "olmoe-1b-7b", "mamba2-1.3b"])
+def test_prefill_matches_forward(arch):
+    cfg = C.get_smoke_config(arch)
+    api = R.build(cfg)
+    params = api.init(KEY)
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    mod = R._module(cfg)
+    full = L.unembed(params["embedding"], cfg, mod.forward(params, cfg, {"tokens": toks}))
+    logits, _ = jax.jit(api.prefill)(params, {"tokens": toks})
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full[:, -1]), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_chunked_attention_equals_sdpa():
+    cfg = C.get_smoke_config("qwen2.5-3b").scaled(attn_impl="chunked", attn_q_block=4)
+    cfg_ref = cfg.scaled(attn_impl="sdpa")
+    api, api_ref = R.build(cfg), R.build(cfg_ref)
+    params = api.init(KEY)
+    b = _batch(cfg)
+    np.testing.assert_allclose(
+        float(api.train_loss(params, b)), float(api_ref.train_loss(params, b)), rtol=1e-5
+    )
+
+
+def test_mrope_sections_differ_from_rope():
+    """M-RoPE with distinct t/h/w positions must change the result."""
+    cfg = C.get_smoke_config("qwen2-vl-2b")
+    api = R.build(cfg)
+    params = api.init(KEY)
+    b = _batch(cfg)
+    S_tot = b["tokens"].shape[1] + b["patches"].shape[1]
+    lin = jnp.arange(S_tot, dtype=jnp.int32)[None, :].repeat(B, 0)
+    pos_same = jnp.broadcast_to(lin[None], (3, B, S_tot))
+    pos_diff = jnp.stack([lin, lin // 2, lin % 7])
+    mod = R._module(cfg)
+    h1 = mod.forward(params, cfg, dict(b, positions=pos_same))
+    h2 = mod.forward(params, cfg, dict(b, positions=pos_diff))
+    assert not np.allclose(np.asarray(h1), np.asarray(h2))
+
+
+def test_param_counts_match_published_sizes():
+    expect = {
+        "minicpm-2b": 2.7e9, "qwen2.5-3b": 3.1e9, "deepseek-67b": 67.4e9,
+        "mamba2-1.3b": 1.4e9, "deepseek-v2-lite-16b": 15.7e9,
+        "olmoe-1b-7b": 6.9e9, "zamba2-7b": 6.8e9, "whisper-medium": 0.8e9,
+        "qwen2-vl-2b": 1.5e9,
+    }
+    for arch, want in expect.items():
+        n = R.param_count(C.get_config(arch))
+        assert abs(n - want) / want < 0.12, (arch, n, want)
+
+
+def test_moe_active_params_smaller():
+    for arch in ("olmoe-1b-7b", "deepseek-v2-lite-16b"):
+        cfg = C.get_config(arch)
+        assert R.param_count(cfg, active_only=True) < 0.45 * R.param_count(cfg)

@@ -1,0 +1,39 @@
+"""Multi-device integration tests (8 fake devices via subprocess).
+
+The fake-device XLA flag must be set before jax initializes; pytest has
+already imported jax by test time, so each scenario runs in a fresh
+subprocess (tests/_multidev_driver.py).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+DRIVER = os.path.join(os.path.dirname(__file__), "_multidev_driver.py")
+
+SCENARIOS = [
+    "a2a_equiv",
+    "streaming_consume",
+    "hierarchical_psum",
+    "hash_shuffle",
+    "moe_ep",
+    "sharded_train_equiv",
+    "ckpt_elastic",
+    "distributed_q17",
+    "distributed_q14_q19",
+    "decode_sharded_equiv",
+]
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_multidevice(scenario):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, DRIVER, scenario],
+        capture_output=True, text=True, timeout=420, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert f"PASS {scenario}" in proc.stdout

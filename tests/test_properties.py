@@ -1,0 +1,113 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import exchange
+from repro.kernels import ref as KR
+
+
+# ---------------------------------------------------------------------------
+# pack_by_destination (the message-pool fill): conservation + placement.
+# ---------------------------------------------------------------------------
+
+@given(
+    st.integers(2, 6),          # num_dest
+    st.integers(1, 64),         # rows
+    st.integers(1, 32),         # capacity
+    st.integers(0, 2**31 - 1),  # seed
+)
+@settings(max_examples=40, deadline=None)
+def test_pack_by_destination_invariants(n_dest, n_rows, cap, seed):
+    rng = np.random.default_rng(seed)
+    dest = jnp.asarray(rng.integers(0, n_dest, n_rows), jnp.int32)
+    rows = jnp.asarray(rng.integers(0, 1000, (n_rows, 2)), jnp.int32)
+    bufs, counts, dropped = exchange.pack_by_destination(dest, rows, n_dest, cap)
+    # conservation: kept + dropped == total
+    assert int(counts.sum()) + int(dropped) == n_rows
+    # counts bounded by capacity
+    assert int(counts.max()) <= cap
+    # every buffered row was destined for that buffer
+    d_np, bufs_np, counts_np = np.asarray(dest), np.asarray(bufs), np.asarray(counts)
+    rows_np = np.asarray(rows)
+    for j in range(n_dest):
+        got = bufs_np[j, : counts_np[j]]
+        want = rows_np[d_np == j][:cap]
+        np.testing.assert_array_equal(got, want)  # arrival order preserved
+
+
+@given(st.integers(2, 8), st.integers(1, 128), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_moe_dispatch_slots_are_unique_and_bounded(n_dest, n_rows, seed):
+    rng = np.random.default_rng(seed)
+    cap = max(1, n_rows // n_dest)
+    dest = jnp.asarray(rng.integers(0, n_dest, n_rows), jnp.int32)
+    slot, counts = KR.moe_dispatch_ref(dest, n_dest, cap)
+    slot_np = np.asarray(slot)
+    real = slot_np[slot_np < n_dest * cap]
+    assert len(np.unique(real)) == len(real)  # no slot collisions
+    assert int(np.asarray(counts).sum()) == len(real)
+    # slot // cap equals the destination
+    d_np = np.asarray(dest)
+    np.testing.assert_array_equal((slot_np // cap)[slot_np < n_dest * cap],
+                                  d_np[slot_np < n_dest * cap])
+
+
+@given(st.integers(1, 64), st.integers(2, 64))
+@settings(max_examples=30, deadline=None)
+def test_hash_partition_histogram_sums(nblocks, parts):
+    keys = (jnp.arange(nblocks * 256, dtype=jnp.uint32) * jnp.uint32(2654435761)).astype(jnp.int32)
+    pid, hist = KR.hash_partition_ref(keys, parts)
+    assert int(np.asarray(hist).sum()) == nblocks * 256
+    assert np.asarray(pid).max() < parts
+    # histogram matches a direct bincount
+    np.testing.assert_array_equal(
+        np.asarray(hist).sum(0), np.bincount(np.asarray(pid), minlength=parts)
+    )
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fibonacci_hash_is_permutation_free_of_fixed_patterns(seed):
+    """Uniformity proxy: low-bit buckets of sequential keys are balanced."""
+    base = np.random.default_rng(seed).integers(0, 1 << 20)
+    keys = jnp.arange(base, base + 4096, dtype=jnp.int32)
+    h = np.asarray(KR.fibonacci_hash_ref(keys))
+    counts = np.bincount(h % 16, minlength=16)
+    assert counts.max() / counts.mean() < 1.5
+
+
+# ---------------------------------------------------------------------------
+# Loss function sanity.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_xent_matches_numpy(seed):
+    from repro.models.layers import xent_loss
+
+    rng = np.random.default_rng(seed)
+    logits = rng.standard_normal((3, 5, 11)).astype(np.float32)
+    labels = rng.integers(0, 11, (3, 5))
+    got = float(xent_loss(jnp.asarray(logits), jnp.asarray(labels)))
+    p = np.exp(logits - logits.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    want = -np.log(np.take_along_axis(p, labels[..., None], -1)).mean()
+    np.testing.assert_allclose(got, want, rtol=1e-5)
+
+
+@given(st.sampled_from(["cosine", "wsd", "constant"]))
+@settings(max_examples=6, deadline=None)
+def test_lr_schedule_shape(schedule):
+    from repro.train.optim import AdamWConfig, lr_at
+
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule=schedule)
+    lrs = [float(lr_at(cfg, jnp.int32(s))) for s in range(0, 101, 5)]
+    assert all(0 <= v <= 1.0 for v in lrs)
+    assert lrs[0] < lrs[2]  # warmup rises
+    if schedule != "constant":
+        assert lrs[-1] < max(lrs)  # decays from the peak
+        assert lrs[-1] >= 0.099  # floor at ~10 % of peak

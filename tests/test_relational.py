@@ -1,0 +1,139 @@
+"""Relational engine vs the numpy oracle + planner/skew math (paper §3.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid as H
+from repro.core import skew
+from repro.relational import datagen, oracle, queries
+from repro.relational.plan import PlannerConfig, choose_join_strategy
+from repro.relational.table import Table, morsels, pad_to, shard_rows
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return datagen.gen_all(0.01)
+
+
+def test_q1_matches_oracle(tables):
+    got = queries.q1_finalize(queries.q1_local(tables["lineitem"]))
+    want = oracle.q1_oracle(tables["lineitem"])
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), want[k], rtol=1e-4)
+
+
+def test_q6_matches_oracle(tables):
+    got = float(queries.q6_local(tables["lineitem"]))
+    np.testing.assert_allclose(got, oracle.q6_oracle(tables["lineitem"]), rtol=1e-4)
+
+
+@pytest.mark.parametrize("brand,container", [(12, 2), (1, 0), (3, 5)])
+def test_q17_matches_oracle(tables, brand, container):
+    got = float(queries.q17_local(tables["lineitem"], tables["part"], brand, container))
+    want = oracle.q17_oracle(tables["lineitem"], tables["part"], brand, container)
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_q3_matches_oracle(tables):
+    got = queries.q3_local(tables["customer"], tables["orders"], tables["lineitem"])
+    want = oracle.q3_oracle(tables["customer"], tables["orders"], tables["lineitem"])
+    # revenues are f32 money sums > 2^24 cents: compare with tolerance
+    got_map = dict(zip(np.asarray(got["o_orderkey"]).tolist(),
+                       np.asarray(got["revenue"]).tolist()))
+    want_map = dict(zip(want["o_orderkey"].tolist(), want["revenue"].tolist()))
+    assert set(got_map) == set(want_map)
+    for k, v in want_map.items():
+        np.testing.assert_allclose(got_map[k], v, rtol=1e-5)
+
+
+def test_q14_matches_oracle(tables):
+    pr, tr = queries.q14_local(tables["lineitem"], tables["part"])
+    got = float(queries.q14_finalize(pr, tr))
+    np.testing.assert_allclose(
+        got, oracle.q14_oracle(tables["lineitem"], tables["part"]), rtol=1e-4
+    )
+
+
+def test_q19_matches_oracle(tables):
+    got = float(queries.q19_local(tables["lineitem"], tables["part"]))
+    np.testing.assert_allclose(
+        got, oracle.q19_oracle(tables["lineitem"], tables["part"]), rtol=1e-4
+    )
+
+
+def test_q17_skewed_data_still_correct():
+    tabs = datagen.gen_all(0.01, zipf_partkey=0.84)
+    got = float(queries.q17_local(tabs["lineitem"], tabs["part"]))
+    want = oracle.q17_oracle(tabs["lineitem"], tabs["part"])
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Paper §3.1 quantitative claims.
+# ---------------------------------------------------------------------------
+
+def test_connection_counts_paper_numbers():
+    """6 servers × 40 threads: 57,560 classic connections vs 30 hybrid."""
+    assert H.classic_connections(6, 40) == 57_560
+    assert H.hybrid_connections(6, 40) == 30
+    assert H.classic_buffers_per_operator(6, 40) == 239
+    assert H.hybrid_buffers_per_operator(6, 40) == 5
+
+
+def test_broadcast_threshold_paper_numbers():
+    """Broadcast wins below 239× (classic) vs 5× (hybrid) size ratio."""
+    assert H.broadcast_threshold(6, 40, hybrid=False) == 239
+    assert H.broadcast_threshold(6, 40, hybrid=True) == 5
+    cfg_h = PlannerConfig(num_units=6, threads_per_unit=40, hybrid=True)
+    cfg_c = PlannerConfig(num_units=6, threads_per_unit=40, hybrid=False)
+    # 30x size ratio: hybrid broadcasts, classic partitions
+    assert choose_join_strategy(1_000, 30_000, cfg_h) == "broadcast"
+    assert choose_join_strategy(1_000, 30_000, cfg_c) == "partition"
+
+
+def test_skew_overload_paper_numbers():
+    """Zipf z=0.84: >2x overload at 240 partitions, ~2.8 % at 6 (paper §3.1)."""
+    over_240 = skew.zipf_partition_overload_analytic(240, z=0.84)
+    over_6 = skew.zipf_partition_overload_analytic(6, z=0.84)
+    assert over_240 > 2.0, over_240
+    assert over_6 < 1.06, over_6
+
+
+def test_salting_reduces_overload():
+    rng = np.random.default_rng(0)
+    keys = (rng.zipf(1.8, size=20_000) % 1000).astype(np.int64)  # heavy head
+    counts = np.bincount(keys)
+    heavy = np.argsort(counts)[-8:]  # the hottest keys
+    base = skew.straggler_excess(
+        np.bincount(skew._hash_keys(keys, 0) % np.uint64(8), minlength=8)
+    )
+    salted = skew.salt_keys(keys, heavy_keys=heavy, num_salts=8)
+    after = skew.straggler_excess(
+        np.bincount(skew._hash_keys(salted, 0) % np.uint64(8), minlength=8)
+    )
+    assert after <= base
+
+
+# ---------------------------------------------------------------------------
+# Storage layer.
+# ---------------------------------------------------------------------------
+
+def test_table_mask_and_select(tables):
+    li = tables["lineitem"]
+    t = li.with_mask(li["l_quantity"] > 25).select(["l_quantity"])
+    assert set(t.columns) == {"l_quantity"}
+    assert int(t.num_valid()) < int(li.num_valid())
+
+
+def test_shard_rows_interleaves():
+    t = Table({"x": jnp.arange(8)}, jnp.ones(8, bool))
+    s = shard_rows(t, 2)
+    np.testing.assert_array_equal(np.asarray(s["x"]), [0, 2, 4, 6, 1, 3, 5, 7])
+
+
+def test_pad_and_morsels():
+    t = pad_to(Table({"x": jnp.arange(6)}, jnp.ones(6, bool)), 8)
+    assert t.capacity == 8 and int(t.num_valid()) == 6
+    chunks = list(morsels(t, 3))
+    assert [c.capacity for c in chunks] == [3, 3, 2]
