@@ -10,15 +10,22 @@ the dry-run artifacts — scheduled round-robin phases (collective-permute)
 vs XLA's monolithic all-to-all, modeled at ICI rates with/without the
 contention factor.  This is the paper's technique applied to its LM-era
 workload (DESIGN.md §4).
+
+Pack A/B (``pack_ab``): the partition/pack hot path — XLA one-hot/cumsum
+reference vs the fused Pallas partition+pack kernel — with HLO-level
+evidence that the fused path's intermediates are independent of the
+destination count (no ``[rows, num_dest]`` one-hot), plus a bit-exactness
+check between the two implementations.
 """
 
 import glob
 import json
 import os
+import re
 
 from repro.core import topology as T
 from .bench_scaling import query_time
-from .common import emit
+from .common import emit, time_jit
 
 
 def fig12b():
@@ -57,9 +64,70 @@ def moe_exchange_ab(art_dir: str = "artifacts/dryrun_final"):
             emit(f"moe_ab/{arch}/sched_gain", f"{t_unsched/t_sched:.2f}", "x", "")
 
 
+def pack_ab(rows: int = 8192, width: int = 4):
+    """Partition/pack hot path: XLA one-hot vs the fused Pallas kernel.
+
+    The XLA reference ranks rows with a ``[rows, num_dest + 1]``
+    one-hot/cumsum — O(rows x destinations).  The Pallas path's largest
+    intermediate is the per-block ``[block, bins]`` tile plus the
+    ``[nblocks, bins]`` histogram.  Evidence emitted per destination count:
+
+    * whether the optimized HLO materializes a ``[rows, num_dest + 1]``
+      tensor (it must for xla, must NOT for pallas),
+    * the largest 2-D s32 intermediate in the program,
+    * compiled cost analysis (flops), wall time, and a bit-exactness check.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import exchange
+
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.randint(key, (rows,), 0, 1 << 30)
+    data = jax.random.randint(
+        jax.random.fold_in(key, 1), (rows, width), 0, 1000, dtype=jnp.int32
+    )
+    for n_dest in (8, 64, 256):
+        cap = max(rows // n_dest * 2, 16)  # 2x fair share
+        dest = (keys % n_dest).astype(jnp.int32)
+        outs = {}
+        for impl in ("xla", "pallas"):
+            fn = jax.jit(
+                lambda d, r, impl=impl: exchange.pack_by_destination(
+                    d, r, n_dest, cap, impl=impl
+                )
+            )
+            compiled = fn.lower(dest, data).compile()
+            hlo = compiled.as_text()
+            onehot_shape = f"[{rows},{n_dest + 1}]"
+            materializes = onehot_shape in hlo
+            two_d = [
+                int(a) * int(b) for a, b in re.findall(r"s32\[(\d+),(\d+)\]", hlo)
+            ]
+            peak2d = max(two_d, default=0)
+            try:
+                flops = (compiled.cost_analysis() or {}).get("flops", float("nan"))
+            except Exception:
+                flops = float("nan")
+            wall = time_jit(fn, dest, data)
+            outs[impl] = fn(dest, data)
+            emit(f"pack_ab/ndest{n_dest}/{impl}/materializes_onehot",
+                 str(materializes).lower(), "", f"shape s32{onehot_shape}")
+            emit(f"pack_ab/ndest{n_dest}/{impl}/peak_2d_s32", peak2d, "elements", "")
+            emit(f"pack_ab/ndest{n_dest}/{impl}/flops", f"{flops:.0f}", "", "")
+            emit(f"pack_ab/ndest{n_dest}/{impl}/wall", f"{wall*1e3:.2f}", "ms",
+                 "CPU interpret mode — HLO shape evidence is the signal")
+        import numpy as np
+
+        for a, b in zip(outs["xla"], outs["pallas"]):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        emit(f"pack_ab/ndest{n_dest}/bit_exact", "true", "", "xla == pallas")
+
+
 def run():
     fig12b()
     moe_exchange_ab()
+    pack_ab()
 
 
 if __name__ == "__main__":

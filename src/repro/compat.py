@@ -1,0 +1,96 @@
+"""JAX version-compat shims.
+
+The codebase targets the current public API (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``jax.sharding.AxisType``) but must
+also run on jax 0.4.x, where ``shard_map`` still lives in
+``jax.experimental.shard_map`` (with ``check_rep`` instead of ``check_vma``)
+and ``make_mesh`` takes no ``axis_types``.  Every module that builds meshes
+or shard_maps goes through these two functions instead of touching ``jax``
+directly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+
+
+def make_mesh(
+    axis_shapes: Sequence[int], axis_names: Sequence[str]
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes,
+            axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(
+    f: Any,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: bool = True,
+    axis_names: Any = None,
+):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old.
+
+    ``check_vma`` maps onto the old API's ``check_rep`` (both gate the
+    replication/varying-manual-axes consistency check).  ``axis_names`` (the
+    set of mesh axes the body is manual over) is honored on new jax; on
+    0.4.x the equivalent partial-manual mode (``auto=`` complement) hits an
+    XLA SPMD-partitioner check failure, so we run fully manual instead —
+    axes not mentioned in a spec are then treated as replicated, which is
+    semantically equivalent for bodies that only communicate over their
+    manual axes (all in-repo call sites).
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+            **kwargs,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=check_vma,
+    )
+
+
+def set_mesh(mesh: jax.sharding.Mesh):
+    """Context manager making ``mesh`` the ambient mesh.
+
+    ``jax.set_mesh`` on new jax; on 0.4.x the ``Mesh`` object itself is the
+    context manager that sets the global mesh for sharding resolution.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
+def axis_size(axis_name: Any) -> int:
+    """Static size of a named mesh axis from inside shard_map.
+
+    ``jax.lax.axis_size`` on new jax; on 0.4.x the classic idiom —
+    ``psum`` of a unit constant, which the axis environment folds to a
+    concrete int at trace time.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return int(jax.lax.psum(1, axis_name))
+
+
+__all__ = ["make_mesh", "shard_map", "set_mesh", "axis_size"]

@@ -16,6 +16,25 @@ round-robin phases (§3.2.3).  This module is the JAX/TPU rendition:
   each message as it arrives instead of materializing all of them — the
   paper's workers do the same with incoming tuples).
 
+The partition hot path (paper §3.2.1's per-tuple CRC32 + message-buffer
+fill) has two implementations, selected by ``pack_impl``:
+
+* ``"xla"`` — reference: a ``[rows, num_dest + 1]`` one-hot + cumsum.
+  O(rows x destinations) memory and FLOPs; fine for small meshes, dominates
+  the shuffle itself as the mesh grows.
+* ``"pallas"`` — the fused kernel of :mod:`repro.kernels.hash_partition`:
+  hash + validity mask + block-local rank + block histogram in one pass,
+  combined by an ``[nblocks, bins]`` exclusive scan and a flat gather.  The
+  row-global one-hot never materializes; cost scales with
+  ``rows + nblocks x destinations``.
+
+:func:`hash_shuffle` additionally supports a *chunked double-buffered
+pipeline* (``num_chunks > 1``): rows are split into chunks, and chunk
+``k + 1`` is packed before chunk ``k``'s ppermute phases are issued.  The
+pack has no data dependence on the in-flight shuffle, so XLA's async
+scheduler can overlap partition compute with DMA — the TPU rendition of the
+paper's multiplexer sending message ``k`` while the workers fill ``k + 1``.
+
 Everything here must be called inside ``shard_map`` (a named mesh axis in
 scope).  The pjit/auto-sharded layers above call these through
 :mod:`repro.core.multiplexer`.
@@ -30,9 +49,11 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import axis_size as _axis_size
 from .schedule import Schedule, make_schedule
 
 AllToAllImpl = Literal["xla", "round_robin", "one_factorization"]
+PackImpl = Literal["xla", "pallas"]
 
 
 # ----------------------------------------------------------------------------
@@ -45,7 +66,7 @@ def xla_all_to_all(x: jax.Array, axis_name: str) -> jax.Array:
     ``x[j]`` (leading dim = axis size) is the chunk destined for device ``j``;
     the result's ``y[j]`` is the chunk received from device ``j``.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     assert x.shape[0] == n, f"leading dim {x.shape[0]} != axis size {n}"
     return lax.all_to_all(x, axis_name, split_axis=0, concat_axis=0, tiled=True)
 
@@ -68,6 +89,7 @@ def scheduled_all_to_all(
     x: jax.Array,
     axis_name: str,
     schedule: str = "shift",
+    num_chunks: int = 1,
 ) -> jax.Array:
     """The paper's phased round-robin all-to-all (Fig 10a) via ppermute.
 
@@ -76,11 +98,22 @@ def scheduled_all_to_all(
     schedule is a cyclic shift ``i -> i + k``, which a torus routes over
     link-disjoint paths; the XLA async scheduler may overlap consecutive
     phases' DMAs with unrelated compute.
+
+    ``num_chunks > 1`` splits each per-destination message along its second
+    axis into sub-messages shipped by independent ppermutes — smaller
+    in-flight transfers that the async scheduler can pipeline (double
+    buffering at the transport level).  Requires ``x.ndim >= 2`` and
+    ``x.shape[1] % num_chunks == 0``.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     assert x.shape[0] == n, f"leading dim {x.shape[0]} != axis size {n}"
     if n == 1:
         return x
+    if num_chunks > 1:
+        assert x.ndim >= 2 and x.shape[1] % num_chunks == 0, (
+            f"num_chunks={num_chunks} must divide message dim "
+            f"{x.shape[1] if x.ndim >= 2 else None}"
+        )
     sched = make_schedule(n, schedule)
     me = lax.axis_index(axis_name)
     tgt_tab, src_tab = _phase_tables(sched)
@@ -89,26 +122,47 @@ def scheduled_all_to_all(
     own = lax.dynamic_slice_in_dim(x, me, 1, axis=0)
     y = lax.dynamic_update_slice_in_dim(jnp.zeros_like(x), own, me, axis=0)
 
+    sub = x.shape[1] // num_chunks if num_chunks > 1 else 0
     for k in range(sched.num_phases):
         send_to = tgt_tab[k, me]  # who I send to this phase
         recv_from = src_tab[k, me]  # who I receive from this phase
         chunk = lax.dynamic_slice_in_dim(x, send_to, 1, axis=0)
-        got = lax.ppermute(chunk, axis_name, sched.phase_permutation(k))
+        if num_chunks == 1:
+            got = lax.ppermute(chunk, axis_name, sched.phase_permutation(k))
+        else:
+            parts = [
+                lax.ppermute(
+                    lax.slice_in_dim(chunk, c * sub, (c + 1) * sub, axis=1),
+                    axis_name,
+                    sched.phase_permutation(k),
+                )
+                for c in range(num_chunks)
+            ]
+            got = jnp.concatenate(parts, axis=1)
         # The chunk I got came from `recv_from` and was destined for me.
         y = lax.dynamic_update_slice_in_dim(y, got, recv_from, axis=0)
     return y
 
 
 def all_to_all(
-    x: jax.Array, axis_name: str, impl: AllToAllImpl = "round_robin"
+    x: jax.Array,
+    axis_name: str,
+    impl: AllToAllImpl = "round_robin",
+    num_chunks: int = 1,
 ) -> jax.Array:
-    """Dispatcher: the communication multiplexer's shuffle entry point."""
+    """Dispatcher: the communication multiplexer's shuffle entry point.
+
+    ``num_chunks`` only affects the scheduled transports (the monolithic XLA
+    all-to-all has no phases to pipeline).
+    """
     if impl == "xla":
         return xla_all_to_all(x, axis_name)
     if impl == "round_robin":
-        return scheduled_all_to_all(x, axis_name, schedule="shift")
+        return scheduled_all_to_all(x, axis_name, schedule="shift", num_chunks=num_chunks)
     if impl == "one_factorization":
-        return scheduled_all_to_all(x, axis_name, schedule="one_factorization")
+        return scheduled_all_to_all(
+            x, axis_name, schedule="one_factorization", num_chunks=num_chunks
+        )
     raise ValueError(f"unknown all_to_all impl {impl!r}")
 
 
@@ -129,7 +183,7 @@ def scheduled_all_to_all_consume(
     instead of waiting for the full shuffle.  Avoids materializing the
     ``[n, ...]`` receive buffer (the message pool is one chunk deep).
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     assert x.shape[0] == n
     me = lax.axis_index(axis_name)
     own = lax.dynamic_slice_in_dim(x, me, 1, axis=0)
@@ -159,7 +213,7 @@ def ring_all_gather(x: jax.Array, axis_name: str) -> jax.Array:
     remote server" (vs ``n*t - 1`` sends under classic exchange).  Result
     ``y[j]`` is device ``j``'s chunk.
     """
-    n = lax.axis_size(axis_name)
+    n = _axis_size(axis_name)
     me = lax.axis_index(axis_name)
     y = jnp.zeros((n,) + x.shape, x.dtype)
     y = lax.dynamic_update_slice_in_dim(y, x[None], me, axis=0)
@@ -216,7 +270,7 @@ def hierarchical_psum_tree(tree: Any, inner_axis: str, outer_axis: str) -> Any:
     def one(leaf: jax.Array) -> jax.Array:
         flat = leaf.reshape(-1)
         n = flat.shape[0]
-        inner = lax.axis_size(inner_axis)
+        inner = _axis_size(inner_axis)
         padded = _pad_to(flat, inner)
         red = hierarchical_psum(padded, inner_axis, outer_axis)
         return red[:n].reshape(leaf.shape)
@@ -238,40 +292,33 @@ def fibonacci_hash(keys: jax.Array) -> jax.Array:
 
     The paper hashes join attributes with CRC32 (hardware instruction on
     x86).  TPUs have no CRC32 unit; a Fibonacci/murmur-style multiply-xor mix
-    gives the same uniformity at pure-VPU cost.  uint32 avalanche mix.
+    gives the same uniformity at pure-VPU cost.  Delegates to the single
+    shared definition in :mod:`repro.kernels.ref` — the Pallas pack kernel
+    uses the same one, which is what makes the xla/pallas pack paths
+    bit-exact.
     """
-    x = keys.astype(jnp.uint32)
-    x ^= x >> 16
-    x = x * jnp.uint32(0x7FEB352D)
-    x ^= x >> 15
-    x = x * jnp.uint32(0x846CA68B)
-    x ^= x >> 16
-    return x
+    from repro.kernels.ref import fibonacci_hash_ref
+
+    return fibonacci_hash_ref(keys)
 
 
-def pack_by_destination(
+def _scatter_pack(
     dest: jax.Array,
+    my_rank: jax.Array,
+    counts_all: jax.Array,
     rows: jax.Array,
     num_dest: int,
     capacity: int,
-    valid: jax.Array | None = None,
+    valid: jax.Array,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Partition ``rows`` into per-destination message buffers (paper step 2).
+    """Shared scatter epilogue: within-destination ranks -> message buffers.
 
-    Returns ``(buffers, counts, dropped)`` with ``buffers: [num_dest,
-    capacity, row...]``, ``counts: [num_dest]`` valid rows per buffer and
-    ``dropped``: rows lost to capacity overflow (0 when capacity is sized to
-    the skew bound).  Static shapes throughout — the message pool analogue:
-    fixed-size reusable buffers.
+    ``dest`` is the masked destination (invalid rows -> bin ``num_dest``),
+    ``my_rank`` the arrival-order rank within that bin, ``counts_all`` the
+    per-bin totals (only ``[:num_dest]`` is used).  The scatter itself stays
+    in XLA — dynamic scatter is not an MXU shape.
     """
-    nrows = dest.shape[0]
-    if valid is None:
-        valid = jnp.ones((nrows,), jnp.bool_)
-    dest = jnp.where(valid, dest, num_dest)  # invalid rows -> overflow bucket
-    onehot = jax.nn.one_hot(dest, num_dest + 1, dtype=jnp.int32)
-    rank = jnp.cumsum(onehot, axis=0) - onehot  # rank within destination
-    my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
-    counts = jnp.minimum(onehot.sum(axis=0)[:num_dest], capacity)
+    counts = jnp.minimum(counts_all[:num_dest], capacity)
     keep = (my_rank < capacity) & valid & (dest < num_dest)
     slot = jnp.where(keep, dest * capacity + my_rank, num_dest * capacity)
     flat = jnp.zeros((num_dest * capacity + 1,) + rows.shape[1:], rows.dtype)
@@ -281,6 +328,45 @@ def pack_by_destination(
     return buffers, counts, dropped
 
 
+def pack_by_destination(
+    dest: jax.Array,
+    rows: jax.Array,
+    num_dest: int,
+    capacity: int,
+    valid: jax.Array | None = None,
+    impl: PackImpl = "xla",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Partition ``rows`` into per-destination message buffers (paper step 2).
+
+    Returns ``(buffers, counts, dropped)`` with ``buffers: [num_dest,
+    capacity, row...]``, ``counts: [num_dest]`` valid rows per buffer and
+    ``dropped``: rows lost to capacity overflow (0 when capacity is sized to
+    the skew bound).  Static shapes throughout — the message pool analogue:
+    fixed-size reusable buffers.
+
+    ``impl="xla"`` ranks rows with a ``[rows, num_dest + 1]`` one-hot/cumsum
+    (the reference); ``impl="pallas"`` uses the fused block-parallel kernel
+    (:func:`repro.kernels.ops.partition_ranks`) and never materializes the
+    one-hot.  Both produce bit-identical buffers, counts and drop counts.
+    """
+    nrows = dest.shape[0]
+    if valid is None:
+        valid = jnp.ones((nrows,), jnp.bool_)
+    dest = jnp.where(valid, dest, num_dest)  # invalid rows -> overflow bucket
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        my_rank, counts_all = kernel_ops.partition_ranks(dest, num_dest + 1)
+    elif impl == "xla":
+        onehot = jax.nn.one_hot(dest, num_dest + 1, dtype=jnp.int32)
+        rank = jnp.cumsum(onehot, axis=0) - onehot  # rank within destination
+        my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
+        counts_all = onehot.sum(axis=0)
+    else:
+        raise ValueError(f"unknown pack impl {impl!r}")
+    return _scatter_pack(dest, my_rank, counts_all, rows, num_dest, capacity, valid)
+
+
 def hash_shuffle(
     keys: jax.Array,
     rows: jax.Array,
@@ -288,6 +374,9 @@ def hash_shuffle(
     capacity: int,
     impl: AllToAllImpl = "round_robin",
     valid: jax.Array | None = None,
+    pack_impl: PackImpl = "xla",
+    num_chunks: int = 1,
+    transport_chunks: int = 1,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Full decoupled exchange: partition by key hash, shuffle, reassemble.
 
@@ -295,21 +384,88 @@ def hash_shuffle(
     ``j`` and shuffled so that afterwards every device holds exactly the rows
     hashing to its index.  Returns ``(rows_out, valid_out, dropped)`` where
     ``rows_out: [n * capacity, row...]`` and ``valid_out`` masks real rows.
+
+    ``pack_impl="pallas"`` fuses hash + mask + rank into one kernel pass
+    (:func:`repro.kernels.ops.hash_partition_ranks`).
+
+    ``num_chunks > 1`` turns the shuffle into a chunked double-buffered
+    pipeline: rows are split into ``num_chunks`` equal chunks (each with
+    ``capacity / num_chunks`` per-destination slots), and chunk ``k + 1`` is
+    packed *before* chunk ``k``'s phases are issued, so partition compute
+    overlaps shuffle DMA.  Requires ``num_chunks`` to divide both the row
+    count and ``capacity``.  The output layout is unchanged
+    (``rows_out[j*capacity : (j+1)*capacity]`` holds device ``j``'s rows in
+    arrival order), but padding slots sit at each chunk boundary rather than
+    all at the tail, and capacity overflow is assessed per chunk.
+
+    ``transport_chunks`` is forwarded to the scheduled transports: each
+    phase's message buffer is split into this many independent ppermutes
+    (must divide the per-chunk capacity; the tiny counts exchange is never
+    split).
     """
-    n = lax.axis_size(axis_name)
-    dest = (fibonacci_hash(keys) % jnp.uint32(n)).astype(jnp.int32)
-    buffers, counts, dropped = pack_by_destination(dest, rows, n, capacity, valid)
-    shuffled = all_to_all(buffers, axis_name, impl=impl)
-    counts_in = all_to_all(counts.reshape(n, 1), axis_name, impl=impl).reshape(n)
-    rows_out = shuffled.reshape((n * capacity,) + shuffled.shape[2:])
-    valid_out = (
-        jnp.arange(capacity)[None, :] < counts_in[:, None]
-    ).reshape(n * capacity)
+    n = _axis_size(axis_name)
+    T = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((T,), jnp.bool_)
+    assert T % num_chunks == 0 and capacity % num_chunks == 0, (
+        f"num_chunks={num_chunks} must divide rows={T} and capacity={capacity}"
+    )
+    cap_c = capacity // num_chunks
+    assert cap_c % transport_chunks == 0, (
+        f"transport_chunks={transport_chunks} must divide per-chunk capacity {cap_c}"
+    )
+    rows_c = T // num_chunks
+
+    def pack(c: int):
+        sl = slice(c * rows_c, (c + 1) * rows_c)
+        keys_c, data_c, valid_c = keys[sl], rows[sl], valid[sl]
+        if pack_impl == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            dest, my_rank, counts_all = kernel_ops.hash_partition_ranks(
+                keys_c, valid_c.astype(jnp.int32), n
+            )
+            return _scatter_pack(dest, my_rank, counts_all, data_c, n, cap_c, valid_c)
+        dest = (fibonacci_hash(keys_c) % jnp.uint32(n)).astype(jnp.int32)
+        return pack_by_destination(dest, data_c, n, cap_c, valid=valid_c, impl=pack_impl)
+
+    # Double-buffered pipeline: the pack of chunk c+1 is issued before the
+    # ppermute phases of chunk c and has no data dependence on them, so the
+    # async scheduler is free to overlap partition compute with shuffle DMA.
+    packed = pack(0)
+    shuffled_chunks, counts_chunks = [], []
+    dropped = jnp.int32(0)
+    for c in range(num_chunks):
+        bufs, counts, dropped_c = packed
+        if c + 1 < num_chunks:
+            packed = pack(c + 1)
+        shuffled_chunks.append(
+            all_to_all(bufs, axis_name, impl=impl, num_chunks=transport_chunks)
+        )
+        counts_chunks.append(
+            all_to_all(counts.reshape(n, 1), axis_name, impl=impl).reshape(n)
+        )
+        dropped = dropped + dropped_c
+
+    if num_chunks == 1:
+        shuffled, counts_in = shuffled_chunks[0], counts_chunks[0]
+        rows_out = shuffled.reshape((n * capacity,) + shuffled.shape[2:])
+        valid_out = (
+            jnp.arange(cap_c)[None, :] < counts_in[:, None]
+        ).reshape(n * capacity)
+    else:
+        stacked = jnp.stack(shuffled_chunks, axis=1)  # [n, C, cap_c, row...]
+        rows_out = stacked.reshape((n * capacity,) + stacked.shape[3:])
+        counts_in = jnp.stack(counts_chunks, axis=1)  # [n, C]
+        valid_out = (
+            jnp.arange(cap_c)[None, None, :] < counts_in[:, :, None]
+        ).reshape(n * capacity)
     return rows_out, valid_out, lax.psum(dropped, axis_name)
 
 
 __all__ = [
     "AllToAllImpl",
+    "PackImpl",
     "xla_all_to_all",
     "scheduled_all_to_all",
     "scheduled_all_to_all_consume",

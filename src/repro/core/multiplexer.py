@@ -17,13 +17,24 @@ so that models and the relational engine never choose transports themselves
   is gathered to a single device;
 * dedicated network thread  -> XLA's async DMA engine; phases are issued
   back-to-back so the DMA engine stays busy while the VPU/MXU computes.
+
+Beyond the transport (``impl``), the multiplexer carries the partition/pack
+policy for :meth:`CommMultiplexer.hash_shuffle`:
+
+* ``pack_impl`` — ``"xla"`` (one-hot/cumsum reference) or ``"pallas"`` (the
+  fused partition+pack kernel; no ``[rows, num_dest]`` intermediate);
+* ``pipeline_chunks`` — split the shuffle into this many row chunks and
+  double-buffer: pack chunk ``k + 1`` while chunk ``k``'s phases ship;
+* ``transport_chunks`` — split each scheduled phase's message into this many
+  independent ppermutes (finer-grained DMA pipelining).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable
+import warnings
+from typing import Any, Callable, Sequence
 
 import jax
 
@@ -39,17 +50,31 @@ class CommMultiplexer:
     ``impl`` selects the shuffle transport: ``"round_robin"`` (the paper's
     scheduled phases), ``"one_factorization"`` (bidirectional pairing), or
     ``"xla"`` (monolithic all-to-all baseline — the 'unscheduled' transport
-    the paper improves on).
+    the paper improves on).  ``pack_impl``/``pipeline_chunks``/
+    ``transport_chunks`` tune the partition+pack hot path (module docstring).
     """
 
     plan: HybridPlan
     impl: exchange.AllToAllImpl = "round_robin"
+    pack_impl: exchange.PackImpl = "xla"
+    pipeline_chunks: int = 1
+    transport_chunks: int = 1
 
     # -- exchange-operator entry points (must be inside shard_map) ---------
 
     def all_to_all(self, x: jax.Array, axis_name: str) -> jax.Array:
         self.plan.validate_axis_for_alltoall(axis_name)
-        return exchange.all_to_all(x, axis_name, impl=self.impl)
+        transport = self.transport_chunks
+        if transport > 1 and (x.ndim < 2 or x.shape[1] % transport):
+            warnings.warn(
+                f"transport_chunks={transport} does not divide message dim of "
+                f"shape {x.shape}; shipping whole messages",
+                stacklevel=2,
+            )
+            transport = 1
+        return exchange.all_to_all(
+            x, axis_name, impl=self.impl, num_chunks=transport
+        )
 
     def shuffle_consume(
         self,
@@ -81,8 +106,27 @@ class CommMultiplexer:
         valid: jax.Array | None = None,
     ):
         self.plan.validate_axis_for_alltoall(axis_name)
+        chunks = self.pipeline_chunks
+        T = keys.shape[0]
+        if chunks > 1 and (T % chunks or capacity % chunks):
+            warnings.warn(
+                f"pipeline_chunks={chunks} does not divide rows={T} / "
+                f"capacity={capacity}; running this shuffle unchunked",
+                stacklevel=2,
+            )
+            chunks = 1
+        transport = self.transport_chunks
+        if transport > 1 and (capacity // chunks) % transport:
+            warnings.warn(
+                f"transport_chunks={transport} does not divide per-chunk "
+                f"capacity {capacity // chunks}; shipping whole messages",
+                stacklevel=2,
+            )
+            transport = 1
         return exchange.hash_shuffle(
-            keys, rows, axis_name, capacity, impl=self.impl, valid=valid
+            keys, rows, axis_name, capacity, impl=self.impl, valid=valid,
+            pack_impl=self.pack_impl, num_chunks=chunks,
+            transport_chunks=transport,
         )
 
     def broadcast(self, x: jax.Array, axis_name: str) -> jax.Array:
@@ -105,27 +149,68 @@ class CommMultiplexer:
         return exchange.flat_psum_tree(tree, data_axes)
 
 
+def resolve_schedule_impl(
+    impl: exchange.AllToAllImpl, small_axis_sizes: Sequence[int]
+) -> exchange.AllToAllImpl:
+    """Downgrade an impl that cannot run on the given shuffle-axis sizes.
+
+    ``one_factorization`` (the round-robin-tournament pairing) only exists
+    for even ``n``; on a mesh with an odd-sized shuffle axis the schedule
+    constructor would raise at trace time, *inside* the first query.  Fall
+    back to the ``shift`` schedule (valid for every ``n``, and what the
+    paper itself uses) at multiplexer-build time instead, with a warning.
+    """
+    if impl == "one_factorization" and any(
+        s > 1 and s % 2 for s in small_axis_sizes
+    ):
+        odd = [s for s in small_axis_sizes if s > 1 and s % 2]
+        warnings.warn(
+            f"one_factorization schedules need even axis sizes, got {odd}; "
+            "falling back to the round_robin (shift) schedule",
+            stacklevel=3,
+        )
+        return "round_robin"
+    return impl
+
+
 def make_multiplexer(
-    mesh: jax.sharding.Mesh, impl: exchange.AllToAllImpl = "round_robin"
+    mesh: jax.sharding.Mesh,
+    impl: exchange.AllToAllImpl = "round_robin",
+    pack_impl: exchange.PackImpl = "xla",
+    pipeline_chunks: int = 1,
+    transport_chunks: int = 1,
 ) -> CommMultiplexer:
     """Build the multiplexer for a mesh; verifies the schedule once (cheap).
 
     Mirrors the paper's startup step of establishing the multiplexer
-    connections before query processing begins.
+    connections before query processing begins.  Every small (shuffle-
+    eligible) axis's schedule is verified here — an impl the mesh cannot
+    support is downgraded by :func:`resolve_schedule_impl` rather than
+    letting an invalid config reach the runtime.
     """
     plan = plan_for_mesh(
         tuple(mesh.axis_names), tuple(mesh.devices.shape), exchange=(
             "xla" if impl == "xla" else "round_robin"
         )
     )
+    small_sizes = [
+        size
+        for ax, size in zip(mesh.axis_names, mesh.devices.shape)
+        if ax not in plan.large_axes
+    ]
+    impl = resolve_schedule_impl(impl, small_sizes)
     if impl != "xla":
-        for ax, size in zip(mesh.axis_names, mesh.devices.shape):
-            if ax not in plan.large_axes and size > 1:
-                kind = "shift" if impl == "round_robin" else impl
-                if kind == "one_factorization" and size % 2:
-                    continue
+        kind = "shift" if impl == "round_robin" else impl
+        for size in small_sizes:
+            if size > 1:
                 verify_schedule(make_schedule(size, kind))
-    return CommMultiplexer(plan=plan, impl=impl)
+    return CommMultiplexer(
+        plan=plan,
+        impl=impl,
+        pack_impl=pack_impl,
+        pipeline_chunks=pipeline_chunks,
+        transport_chunks=transport_chunks,
+    )
 
 
 def donate_buffers(fn: Callable, argnums: tuple[int, ...]) -> Callable:
@@ -139,4 +224,9 @@ def donate_buffers(fn: Callable, argnums: tuple[int, ...]) -> Callable:
     return jax.jit(fn, donate_argnums=argnums)
 
 
-__all__ = ["CommMultiplexer", "make_multiplexer", "donate_buffers"]
+__all__ = [
+    "CommMultiplexer",
+    "make_multiplexer",
+    "resolve_schedule_impl",
+    "donate_buffers",
+]

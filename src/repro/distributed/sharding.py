@@ -127,7 +127,9 @@ def mesh_context(ctx: MeshContext | None) -> Iterator[MeshContext | None]:
     token = _CTX.set(ctx)
     try:
         if ctx is not None:
-            with jax.set_mesh(ctx.mesh):
+            from repro.compat import set_mesh
+
+            with set_mesh(ctx.mesh):
                 yield ctx
         else:
             yield None

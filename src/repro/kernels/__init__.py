@@ -8,7 +8,11 @@ run in ``interpret=True`` on CPU — the TPU path is the compile target).
 Inventory (DESIGN.md §3):
 
 * ``hash_partition`` — the decoupled exchange operator's partition hot loop
-  (paper §3.2.1): multiply-xor hash + per-destination histogram.
+  (paper §3.2.1): multiply-xor hash + per-destination histogram, plus the
+  fused partition+pack variants (``partition_pack`` /
+  ``hash_partition_pack``) that also emit block-local within-destination
+  ranks so the message-buffer pack never materializes a
+  ``[rows, num_dest]`` one-hot (see ``ops.partition_ranks``).
 * ``flash_attention``— blocked causal/GQA attention (prefill path).
 * ``ssd_scan``      — mamba2 SSD chunk kernel (intra-chunk quadratic +
   chunk-state emission fused in VMEM).

@@ -1,14 +1,34 @@
-"""Exchange-operator partition hot loop — Pallas TPU kernel (paper §3.2.1).
+"""Exchange-operator partition hot loop — Pallas TPU kernels (paper §3.2.1).
 
 HyPer's decoupled exchange operator hashes each tuple's join key (CRC32 on
 x86) and partitions tuples into per-destination message buffers.  On TPU the
 hash is a multiply-xor avalanche (pure VPU, no CRC unit — DESIGN.md §2) and
-the kernel emits, per block of keys, (a) the destination partition ids and
-(b) a per-block destination histogram.  The histogram tree-combine and the
-actual scatter stay in XLA (dynamic scatter is not an MXU shape), but the
-per-row hashing+binning — the loop the paper code-generates with LLVM — is
-this kernel.  Schema specialization happens at trace time (Pallas kernels
-are shape-specialized), mirroring the paper's generated serialization code.
+the hot loop is fused into a single block-parallel kernel.  Three entry
+points, in increasing order of fusion:
+
+* :func:`hash_partition` — (pid, per-block histogram).  The original kernel,
+  kept for the MoE-style callers that only need destination ids.
+* :func:`partition_pack` — given destination ids, emits per-block histograms
+  AND each row's *block-local* within-destination rank.  The global rank a
+  message-buffer pack needs is then ``exclusive_scan(block_hists)[block, d]
+  + local_rank`` — an ``[nblocks, bins]`` scan plus a flat gather, so the
+  pack never materializes the ``[rows, bins]`` one-hot/cumsum the pure-XLA
+  path needs (O(rows x bins) memory and FLOPs).
+* :func:`hash_partition_pack` — the full fused hot loop: hash + validity
+  masking (invalid rows routed to the overflow bin) + block-local rank +
+  block histogram in one pass over the keys.  This is the kernel analogue of
+  the per-tuple loop the paper code-generates with LLVM; schema
+  specialization happens at trace time (Pallas kernels are shape-specialized),
+  mirroring the paper's generated serialization code.
+
+The histogram tree-combine and the actual scatter stay in XLA (dynamic
+scatter is not an MXU shape) — see :func:`repro.kernels.ops.partition_ranks`
+for the combine and :func:`repro.core.exchange.pack_by_destination` for the
+scatter.
+
+Rows whose destination id is outside ``[0, num_bins)`` (the padding value
+used by the ``ops`` wrappers) match no bin: they get rank 0 and contribute
+to no histogram bucket.
 """
 
 from __future__ import annotations
@@ -20,13 +40,28 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+# The uint32 multiply-xor mix shared with exchange.fibonacci_hash — one
+# definition so the kernel/XLA bit-exactness contract can't drift.
+from .ref import fibonacci_hash_ref as _avalanche  # noqa: E402
+
+
+def _rank_and_hist(d: jax.Array, num_bins: int, block: int):
+    """Block-local within-bin rank + bin histogram for one block of dests.
+
+    ``[block, num_bins]`` lives only in VMEM for the duration of one grid
+    step — this is the whole point of the kernel: the row-global one-hot
+    never exists.
+    """
+    onehot = (
+        d[:, None] == jax.lax.broadcasted_iota(jnp.int32, (block, num_bins), 1)
+    ).astype(jnp.int32)
+    csum = jnp.cumsum(onehot, axis=0)
+    rank = ((csum - onehot) * onehot).sum(axis=1)
+    return rank, csum[block - 1]
+
+
 def _hash_kernel(keys_ref, pid_ref, hist_ref, *, num_partitions: int, block: int):
-    x = keys_ref[...].astype(jnp.uint32)  # [block]
-    x ^= x >> 16
-    x = x * jnp.uint32(0x7FEB352D)
-    x ^= x >> 15
-    x = x * jnp.uint32(0x846CA68B)
-    x ^= x >> 16
+    x = _avalanche(keys_ref[...])
     pid = (x % jnp.uint32(num_partitions)).astype(jnp.int32)
     pid_ref[...] = pid
     onehot = (
@@ -59,4 +94,89 @@ def hash_partition(
     )(keys)
 
 
-__all__ = ["hash_partition"]
+def _partition_pack_kernel(dest_ref, hist_ref, rank_ref, *, num_bins: int, block: int):
+    rank, hist = _rank_and_hist(dest_ref[...], num_bins, block)
+    rank_ref[...] = rank
+    hist_ref[0] = hist
+
+
+def partition_pack(
+    dest: jax.Array, num_bins: int, block: int = 256, interpret: bool = True
+) -> tuple[jax.Array, jax.Array]:
+    """(per-block histograms [T/block, num_bins], block-local ranks [T])."""
+    T = dest.shape[0]
+    assert T % block == 0, (T, block)
+    nb = T // block
+    kernel = functools.partial(_partition_pack_kernel, num_bins=num_bins, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=[
+            pl.BlockSpec((1, num_bins), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, num_bins), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(dest)
+
+
+def _hash_partition_pack_kernel(
+    keys_ref, valid_ref, dest_ref, hist_ref, rank_ref, *, num_partitions: int, block: int
+):
+    x = _avalanche(keys_ref[...])
+    pid = (x % jnp.uint32(num_partitions)).astype(jnp.int32)
+    # Invalid rows go to the overflow bin (bin index == num_partitions).
+    d = jnp.where(valid_ref[...] != 0, pid, num_partitions)
+    dest_ref[...] = d
+    rank, hist = _rank_and_hist(d, num_partitions + 1, block)
+    rank_ref[...] = rank
+    hist_ref[0] = hist
+
+
+def hash_partition_pack(
+    keys: jax.Array,
+    valid: jax.Array,
+    num_partitions: int,
+    block: int = 256,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused hash + mask + pack metadata in one pass over the keys.
+
+    Returns ``(dest [T], per-block histograms [T/block, P+1], block-local
+    ranks [T])`` where ``dest`` is the masked destination (``P`` = overflow
+    bin for invalid rows) and histograms/ranks cover all ``P + 1`` bins.
+    ``valid`` is int32 (nonzero == valid).
+    """
+    T = keys.shape[0]
+    assert T % block == 0, (T, block)
+    assert valid.shape == (T,), (valid.shape, T)
+    nb = T // block
+    kernel = functools.partial(
+        _hash_partition_pack_kernel, num_partitions=num_partitions, block=block
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1, num_partitions + 1), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+            jax.ShapeDtypeStruct((nb, num_partitions + 1), jnp.int32),
+            jax.ShapeDtypeStruct((T,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(keys, valid)
+
+
+__all__ = ["hash_partition", "partition_pack", "hash_partition_pack"]

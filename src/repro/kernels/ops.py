@@ -116,6 +116,72 @@ def hash_partition(keys, num_partitions, block=256):
     return R.hash_partition_ref(keys, num_partitions, block=blk)
 
 
+def _combine_block_ranks(hist, local_rank, dest, blk):
+    """Global within-bin ranks from per-block histograms + block-local ranks.
+
+    ``rank[t] = sum(hist[b, dest[t]] for b < block_of(t)) + local_rank[t]``;
+    the exclusive scan is over ``[nblocks, num_bins]`` and the per-row lookup
+    is a flat 1-D gather — nothing of shape ``[rows, num_bins]`` exists.
+    """
+    num_bins = hist.shape[1]
+    base = jnp.cumsum(hist, axis=0) - hist  # exclusive over blocks
+    blocks = jnp.arange(dest.shape[0]) // blk
+    flat_idx = blocks * num_bins + jnp.clip(dest, 0, num_bins - 1)
+    return base.reshape(-1)[flat_idx] + local_rank
+
+
+def partition_ranks(dest, num_bins, block=256):
+    """(within-bin ranks [T], bin counts [num_bins]) for destination ids.
+
+    The fused-pack entry point: Pallas kernel per block (histogram +
+    block-local rank), cheap XLA combine across blocks.  ``dest`` values
+    outside ``[0, num_bins)`` get an arbitrary rank and count nowhere.
+    Handles arbitrary ``T`` by padding with an inert out-of-range id.
+    """
+    T = dest.shape[0]
+    blk = min(block, T)
+    pad = (-T) % blk
+    d = dest.astype(jnp.int32)
+    if pad:
+        d = jnp.concatenate([d, jnp.full((pad,), num_bins, jnp.int32)])
+    if kernels_enabled():
+        from .hash_partition import partition_pack as kern
+
+        hist, local = kern(d, num_bins, block=blk, interpret=_interpret())
+    else:
+        hist, local = R.partition_pack_ref(d, num_bins, block=blk)
+    rank = _combine_block_ranks(hist, local, d, blk)
+    return rank[:T], hist.sum(axis=0)
+
+
+def hash_partition_ranks(keys, valid, num_partitions, block=256):
+    """Fused hash+mask+rank: (dest [T], ranks [T], counts [P+1]).
+
+    ``dest`` is the masked destination (invalid rows -> overflow bin ``P``).
+    Padding rows (arbitrary ``T``) land in the overflow bin, so
+    ``counts[num_partitions]`` includes them — only ``counts[:P]`` is
+    meaningful to callers.
+    """
+    T = keys.shape[0]
+    blk = min(block, T)
+    pad = (-T) % blk
+    k = keys.astype(jnp.int32)
+    v = valid.astype(jnp.int32)
+    if pad:
+        k = jnp.concatenate([k, jnp.zeros((pad,), jnp.int32)])
+        v = jnp.concatenate([v, jnp.zeros((pad,), jnp.int32)])
+    if kernels_enabled():
+        from .hash_partition import hash_partition_pack as kern
+
+        dest, hist, local = kern(
+            k, v, num_partitions, block=blk, interpret=_interpret()
+        )
+    else:
+        dest, hist, local = R.hash_partition_pack_ref(k, v, num_partitions, block=blk)
+    rank = _combine_block_ranks(hist, local, dest, blk)
+    return dest[:T], rank[:T], hist.sum(axis=0)
+
+
 def moe_dispatch(dest, num_dest, capacity, block=256):
     T = dest.shape[0]
     blk = min(block, T)
@@ -132,5 +198,7 @@ __all__ = [
     "flash_attention",
     "ssd_scan",
     "hash_partition",
+    "partition_ranks",
+    "hash_partition_ranks",
     "moe_dispatch",
 ]

@@ -68,6 +68,35 @@ def hash_partition_ref(
     return pid, onehot.sum(axis=1)
 
 
+def partition_pack_ref(
+    dest: jax.Array, num_bins: int, block: int = 256
+) -> tuple[jax.Array, jax.Array]:
+    """(per-block histograms [T/block, num_bins], block-local ranks [T]).
+
+    Oracle for :func:`repro.kernels.hash_partition.partition_pack`.  Out-of-
+    range destinations (the wrappers' padding value) match no bin: rank 0,
+    no histogram contribution.
+    """
+    T = dest.shape[0]
+    assert T % block == 0, (T, block)
+    d = dest.reshape(T // block, block)
+    onehot = (d[:, :, None] == jnp.arange(num_bins)[None, None, :]).astype(jnp.int32)
+    csum = jnp.cumsum(onehot, axis=1)
+    local = ((csum - onehot) * onehot).sum(axis=-1).reshape(T)
+    hist = onehot.sum(axis=1)
+    return hist, local
+
+
+def hash_partition_pack_ref(
+    keys: jax.Array, valid: jax.Array, num_partitions: int, block: int = 256
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(dest [T], per-block histograms [T/block, P+1], block-local ranks [T])."""
+    pid = (fibonacci_hash_ref(keys) % jnp.uint32(num_partitions)).astype(jnp.int32)
+    dest = jnp.where(valid != 0, pid, num_partitions)
+    hist, local = partition_pack_ref(dest, num_partitions + 1, block)
+    return dest, hist, local
+
+
 # ----------------------------------------------------------------------------
 # moe_dispatch oracle: rank-within-expert + capacity slots.
 # ----------------------------------------------------------------------------
@@ -94,5 +123,7 @@ __all__ = [
     "ssd_scan_ref",
     "fibonacci_hash_ref",
     "hash_partition_ref",
+    "partition_pack_ref",
+    "hash_partition_pack_ref",
     "moe_dispatch_ref",
 ]

@@ -128,7 +128,9 @@ def _ep_moe_local(params, cfg: ModelConfig, x, axis_name: str):
 
     x: [T_loc, d] — this shard's slice of the token stream.
     """
-    m = lax.axis_size(axis_name)
+    from repro.compat import axis_size
+
+    m = axis_size(axis_name)
     T_loc, d = x.shape
     E = cfg.num_experts
     E_loc = E // m
@@ -207,7 +209,9 @@ def moe_ep(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
         "w_up": P(axis, None, None),
         "w_down": P(axis, None, None),
     }
-    fn = jax.shard_map(
+    from repro.compat import shard_map
+
+    fn = shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(param_specs, P(axis, None)),

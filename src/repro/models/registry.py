@@ -132,7 +132,9 @@ def param_shape_specs(cfg: ModelConfig) -> tuple[Any, Any]:
 
 def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
     tree, specs = param_shape_specs(cfg)
-    flat = jax.tree.leaves_with_path(tree)
+    # jax.tree.leaves_with_path needs jax>=0.4.38; the tree_util spelling
+    # works on every supported version
+    flat = jax.tree_util.tree_leaves_with_path(tree)
     total = 0
     for path, leaf in flat:
         n = leaf.size

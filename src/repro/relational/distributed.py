@@ -10,6 +10,16 @@ the group domain is small (Q1), and a final psum/top-k combine.
 Tables cross the shard_map boundary as (columns-dict, valid) pytrees; the
 exchange ships a densely packed int32 row matrix (paper Fig 8's fixed-width
 serialization — column pruning happens before the pack).
+
+All exchanges are routed through a :class:`repro.core.multiplexer
+.CommMultiplexer` built once per query ("decoupled": the query plans never
+pick transports themselves).  The queries expose the multiplexer's knobs —
+``impl`` (transport), ``pack_impl`` (``"xla"`` one-hot reference vs
+``"pallas"`` fused partition+pack kernel) and ``num_chunks`` (chunked
+double-buffered shuffle pipeline).  Every partition exchange's capacity is
+the static zero-drop bound, and the psum'd drop count of each exchange is
+checked after execution — capacity overflow raises instead of silently
+losing rows.
 """
 
 from __future__ import annotations
@@ -22,7 +32,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import exchange
+from repro.compat import make_mesh, shard_map
+from repro.core.multiplexer import CommMultiplexer, make_multiplexer
 from . import operators as ops
 from . import queries as Q
 from .plan import PlannerConfig, choose_join_strategy
@@ -30,9 +41,14 @@ from .table import Table, pad_to, shard_rows
 
 
 def _mesh(num_shards: int):
-    return jax.make_mesh(
-        (num_shards,), ("q",),
-        axis_types=(jax.sharding.AxisType.Auto,),
+    return make_mesh((num_shards,), ("q",))
+
+
+def _make_mux(
+    mesh, impl: str, pack_impl: str = "xla", num_chunks: int = 1
+) -> CommMultiplexer:
+    return make_multiplexer(
+        mesh, impl=impl, pack_impl=pack_impl, pipeline_chunks=num_chunks
     )
 
 
@@ -47,34 +63,50 @@ def _local(table: Table):
 
 
 def _exchange_by_key(
-    tbl_cols: dict, tbl_valid, key_name: str, columns: list[str],
-    axis: str, impl: str,
-) -> Table:
+    mux: CommMultiplexer, tbl_cols: dict, tbl_valid, key_name: str,
+    columns: list[str], axis: str,
+) -> tuple[Table, jax.Array]:
     """Decoupled exchange: repartition rows by hash(key) over ``axis``.
 
     Capacity per (src, dst) message equals the local capacity — the static
     zero-drop bound (a destination can at most receive every row of every
     sender).  Column pruning (paper §3.2.1) happens via ``columns``.
+
+    Returns ``(table, dropped)`` where ``dropped`` is the psum'd number of
+    rows lost to capacity overflow (0 under the zero-drop bound; surfaced so
+    callers can turn overflow into an error instead of silent row loss).
     """
-    n = lax.axis_size(axis)
     cap = tbl_valid.shape[0]
     rows = jnp.stack([tbl_cols[c].astype(jnp.int32) for c in columns], axis=1)
-    out_rows, out_valid, _ = exchange.hash_shuffle(
+    out_rows, out_valid, dropped = mux.hash_shuffle(
         tbl_cols[key_name].astype(jnp.int32), rows, axis,
-        capacity=cap, impl=impl, valid=tbl_valid,
+        capacity=cap, valid=tbl_valid,
     )
     cols = {c: out_rows[:, i] for i, c in enumerate(columns)}
-    return Table(cols, out_valid)
+    return Table(cols, out_valid), dropped
 
 
-def _broadcast_table(tbl_cols: dict, tbl_valid, columns: list[str], axis: str) -> Table:
+def _broadcast_table(
+    mux: CommMultiplexer, tbl_cols: dict, tbl_valid, columns: list[str], axis: str
+) -> Table:
     """Broadcast exchange (ring all-gather) of a small table."""
     cols = {}
     for c in columns:
-        g = exchange.broadcast_exchange(tbl_cols[c], axis, impl="ring")
+        g = mux.broadcast(tbl_cols[c], axis)
         cols[c] = g.reshape(-1)
-    v = exchange.broadcast_exchange(tbl_valid, axis, impl="ring").reshape(-1)
+    v = mux.broadcast(tbl_valid, axis).reshape(-1)
     return Table(cols, v)
+
+
+def _raise_on_dropped(query: str, dropped) -> None:
+    """Capacity overflow is an error, not silent row loss (paper: the message
+    pool is sized so overflow cannot happen; if it does, results are wrong)."""
+    d = int(jax.device_get(dropped))
+    if d:
+        raise RuntimeError(
+            f"{query}: exchange dropped {d} rows to capacity overflow — "
+            "results would silently lose rows; raise the capacity bound"
+        )
 
 
 # ----------------------------------------------------------------------------
@@ -89,7 +121,7 @@ def q1_distributed(lineitem: Table, num_shards: int, delta_days: int = 90):
         partial_ = Q.q1_local(Table(cols, valid), delta_days)
         return jax.tree.map(lambda x: lax.psum(x, "q"), partial_)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=_mesh(num_shards),
         in_specs=(P("q"), P("q")), out_specs=P(),
     )
@@ -102,7 +134,7 @@ def q6_distributed(lineitem: Table, num_shards: int, year: int = 1994):
     def body(cols, valid):
         return lax.psum(Q.q6_local(Table(cols, valid), year), "q")
 
-    fn = jax.shard_map(
+    fn = shard_map(
         body, mesh=_mesh(num_shards), in_specs=(P("q"), P("q")), out_specs=P()
     )
     return jax.jit(fn)(*_local(li))
@@ -120,31 +152,40 @@ def q17_distributed(
     brand: int = 12,
     container: int = 2,
     impl: str = "round_robin",
+    pack_impl: str = "xla",
+    num_chunks: int = 1,
 ):
     li = _prep(lineitem, num_shards)
     pt = _prep(part, num_shards)
+    mesh = _mesh(num_shards)
+    mux = _make_mux(mesh, impl, pack_impl, num_chunks)
     planner = PlannerConfig(num_units=num_shards, hybrid=True)
     strategy = choose_join_strategy(
         small_rows=part.capacity, large_rows=lineitem.capacity, cfg=planner
     )
 
     def body(li_cols, li_valid, pt_cols, pt_valid):
-        li_t = _exchange_by_key(
-            li_cols, li_valid, "l_partkey",
-            ["l_partkey", "l_quantity", "l_extendedprice"], "q", impl,
+        li_t, dropped = _exchange_by_key(
+            mux, li_cols, li_valid, "l_partkey",
+            ["l_partkey", "l_quantity", "l_extendedprice"], "q",
         )
         assert strategy == "broadcast", strategy  # part is ~30x smaller
         pt_t = _broadcast_table(
-            pt_cols, pt_valid, ["p_partkey", "p_brand", "p_container"], "q"
+            mux, pt_cols, pt_valid, ["p_partkey", "p_brand", "p_container"], "q"
         )
         partial_ = Q.q17_local(li_t, pt_t, brand, container)
-        return lax.psum(partial_, "q")
+        return lax.psum(partial_, "q"), dropped
 
-    fn = jax.shard_map(
-        body, mesh=_mesh(num_shards),
-        in_specs=(P("q"), P("q"), P("q"), P("q")), out_specs=P(),
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("q"), P("q"), P("q"), P("q")), out_specs=(P(), P()),
+        # the replication checker has no rule for pallas_call (the fused
+        # pack kernel); keep it on for the xla pack path
+        check_vma=mux.pack_impl != "pallas",
     )
-    return jax.jit(fn)(*_local(li), *_local(pt))
+    result, dropped = jax.jit(fn)(*_local(li), *_local(pt))
+    _raise_on_dropped("q17", dropped)
+    return result
 
 
 # ----------------------------------------------------------------------------
@@ -158,22 +199,26 @@ def q3_distributed(
     num_shards: int,
     segment: int = 1,
     impl: str = "round_robin",
+    pack_impl: str = "xla",
+    num_chunks: int = 1,
 ):
     cu = _prep(customer, num_shards)
     od = _prep(orders, num_shards)
     li = _prep(lineitem, num_shards)
+    mesh = _mesh(num_shards)
+    mux = _make_mux(mesh, impl, pack_impl, num_chunks)
     from .datagen import date_to_days
 
     cutoff = date_to_days(1995, 3, 15)
 
     def body(cu_cols, cu_valid, od_cols, od_valid, li_cols, li_valid):
         # stage 1: co-partition customer and orders on custkey
-        cu_t = _exchange_by_key(
-            cu_cols, cu_valid, "c_custkey", ["c_custkey", "c_mktsegment"], "q", impl
+        cu_t, drop0 = _exchange_by_key(
+            mux, cu_cols, cu_valid, "c_custkey", ["c_custkey", "c_mktsegment"], "q"
         )
-        od_t = _exchange_by_key(
-            od_cols, od_valid, "o_custkey",
-            ["o_custkey", "o_orderkey", "o_orderdate"], "q", impl,
+        od_t, drop1 = _exchange_by_key(
+            mux, od_cols, od_valid, "o_custkey",
+            ["o_custkey", "o_orderkey", "o_orderdate"], "q",
         )
         fcust = cu_t.with_mask(cu_t["c_mktsegment"] == segment)
         ford = od_t.with_mask(od_t["o_orderdate"] < cutoff)
@@ -183,13 +228,13 @@ def q3_distributed(
         od_j = ford.with_mask(cmatch)
 
         # stage 2: co-partition joined orders and lineitem on orderkey
-        od_t2 = _exchange_by_key(
-            od_j.columns, od_j.valid, "o_orderkey",
-            ["o_orderkey", "o_orderdate"], "q", impl,
+        od_t2, drop2 = _exchange_by_key(
+            mux, od_j.columns, od_j.valid, "o_orderkey",
+            ["o_orderkey", "o_orderdate"], "q",
         )
-        li_t = _exchange_by_key(
-            li_cols, li_valid, "l_orderkey",
-            ["l_orderkey", "l_shipdate", "l_extendedprice", "l_discount"], "q", impl,
+        li_t, drop3 = _exchange_by_key(
+            mux, li_cols, li_valid, "l_orderkey",
+            ["l_orderkey", "l_shipdate", "l_extendedprice", "l_discount"], "q",
         )
         flin = li_t.with_mask(li_t["l_shipdate"] > cutoff)
         oidx, omatch = ops.join_pk(
@@ -206,25 +251,24 @@ def q3_distributed(
             aggs["revenue"], gvalid, 10,
             {"o_orderkey": gkeys, "revenue": aggs["revenue"]},
         )
-        all_vals = exchange.broadcast_exchange(vals, "q", impl="ring").reshape(-1)
-        all_keys = exchange.broadcast_exchange(
-            payload["o_orderkey"], "q", impl="ring"
-        ).reshape(-1)
-        all_rev = exchange.broadcast_exchange(
-            payload["revenue"], "q", impl="ring"
-        ).reshape(-1)
+        all_vals = mux.broadcast(vals, "q").reshape(-1)
+        all_keys = mux.broadcast(payload["o_orderkey"], "q").reshape(-1)
+        all_rev = mux.broadcast(payload["revenue"], "q").reshape(-1)
         top_vals, idx = lax.top_k(all_vals, 10)
-        return {"o_orderkey": all_keys[idx], "revenue": all_rev[idx]}
+        result = {"o_orderkey": all_keys[idx], "revenue": all_rev[idx]}
+        return result, drop0 + drop1 + drop2 + drop3
 
-    fn = jax.shard_map(
-        body, mesh=_mesh(num_shards),
-        in_specs=(P("q"),) * 6, out_specs=P(),
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("q"),) * 6, out_specs=(P(), P()),
         # the top-k combine is replicated by construction (same ring
         # all-gather on every shard) but VMA can't infer that through
         # ppermute — disable the check rather than force an extra psum
         check_vma=False,
     )
-    return jax.jit(fn)(*_local(cu), *_local(od), *_local(li))
+    result, dropped = jax.jit(fn)(*_local(cu), *_local(od), *_local(li))
+    _raise_on_dropped("q3", dropped)
+    return result
 
 
 def _partkey_join_plan(query_fn, part_cols_needed):
@@ -232,26 +276,32 @@ def _partkey_join_plan(query_fn, part_cols_needed):
     the (much smaller) part side — the hybrid planner's broadcast rule."""
 
     def run(lineitem: Table, part: Table, num_shards: int, impl: str = "round_robin",
-            **kw):
+            pack_impl: str = "xla", num_chunks: int = 1, **kw):
         li = _prep(lineitem, num_shards)
         pt = _prep(part, num_shards)
+        mesh = _mesh(num_shards)
+        mux = _make_mux(mesh, impl, pack_impl, num_chunks)
 
         def body(li_cols, li_valid, pt_cols, pt_valid):
-            li_t = _exchange_by_key(
-                li_cols, li_valid, "l_partkey",
+            li_t, dropped = _exchange_by_key(
+                mux, li_cols, li_valid, "l_partkey",
                 ["l_partkey", "l_quantity", "l_extendedprice", "l_discount",
-                 "l_shipdate"], "q", impl,
+                 "l_shipdate"], "q",
             )
-            pt_t = _broadcast_table(pt_cols, pt_valid, part_cols_needed, "q")
+            pt_t = _broadcast_table(mux, pt_cols, pt_valid, part_cols_needed, "q")
             return jax.tree.map(
                 lambda v: lax.psum(v, "q"), query_fn(li_t, pt_t, **kw)
-            )
+            ), dropped
 
-        fn = jax.shard_map(
-            body, mesh=_mesh(num_shards),
-            in_specs=(P("q"), P("q"), P("q"), P("q")), out_specs=P(),
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P("q"), P("q"), P("q"), P("q")), out_specs=(P(), P()),
+            # see q17: no replication rule for pallas_call
+            check_vma=mux.pack_impl != "pallas",
         )
-        return jax.jit(fn)(*_local(li), *_local(pt))
+        result, dropped = jax.jit(fn)(*_local(li), *_local(pt))
+        _raise_on_dropped(getattr(query_fn, "__name__", "partkey_join"), dropped)
+        return result
 
     return run
 

@@ -120,7 +120,9 @@ def make_train_step(
                 from jax.sharding import PartitionSpec as P
 
                 # explicit two-level sync of the (replicated-view) grads
-                grads = jax.shard_map(
+                from repro.compat import shard_map
+
+                grads = shard_map(
                     lambda g: hierarchical_psum_tree(g, "data", ctx.pod_axis),
                     mesh=ctx.mesh,
                     in_specs=P(),

@@ -18,6 +18,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.compat import shard_map  # noqa: E402
 from repro.core import exchange  # noqa: E402
 from repro.distributed.sharding import MeshContext, default_rules, mesh_context  # noqa: E402
 from repro.launch.mesh import make_test_mesh  # noqa: E402
@@ -33,7 +34,7 @@ def scenario_a2a_equiv():
     x = jax.random.normal(jax.random.PRNGKey(0), (64, 4))
     outs = {}
     for impl in ("xla", "round_robin", "one_factorization"):
-        fn = jax.shard_map(
+        fn = shard_map(
             lambda x, impl=impl: exchange.all_to_all(x, "x", impl=impl),
             mesh=mesh, in_specs=P("x"), out_specs=P("x"),
         )
@@ -58,8 +59,8 @@ def scenario_streaming_consume():
             jnp.zeros((4,), x.dtype),
         )
 
-    a = jax.jit(jax.shard_map(full, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
-    b = jax.jit(jax.shard_map(stream, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+    a = jax.jit(shard_map(full, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
+    b = jax.jit(shard_map(stream, mesh=mesh, in_specs=P("x"), out_specs=P("x")))(x)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
     print("PASS streaming_consume")
 
@@ -74,8 +75,8 @@ def scenario_hierarchical_psum():
     def flat(g):
         return exchange.flat_psum_tree({"g": g}, ("pod", "data"))["g"]
 
-    a = jax.jit(jax.shard_map(hier, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data"))))(g)
-    b = jax.jit(jax.shard_map(flat, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data"))))(g)
+    a = jax.jit(shard_map(hier, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data"))))(g)
+    b = jax.jit(shard_map(flat, mesh=mesh, in_specs=P(("pod", "data")), out_specs=P(("pod", "data"))))(g)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
     print("PASS hierarchical_psum")
 
@@ -95,7 +96,7 @@ def scenario_hash_shuffle():
         ok = jnp.where(out_valid, h == me.astype(jnp.uint32), True).all()
         return out_valid.sum()[None], dropped, ok[None]
 
-    fn = jax.shard_map(shuffle, mesh=mesh, in_specs=(P("x"), P("x")),
+    fn = shard_map(shuffle, mesh=mesh, in_specs=(P("x"), P("x")),
                        out_specs=(P("x"), P(), P("x")))
     kept, dropped, ok = jax.jit(fn)(keys, rows)
     assert int(dropped) == 0, int(dropped)
@@ -231,6 +232,138 @@ def scenario_decode_sharded_equiv():
         np.asarray(logits_ref), np.asarray(logits_s), rtol=2e-4, atol=2e-4
     )
     print("PASS decode_sharded_equiv")
+
+
+def scenario_hash_shuffle_equiv():
+    """hash_shuffle delivers the same rows per device across every transport
+    (xla / round_robin / one_factorization), pack impl (xla / pallas) and
+    pipeline chunking (1 / 4), on uniform and heavily skewed keys."""
+    mesh = _mesh1d()
+    rng = np.random.default_rng(0)
+    uniform = rng.integers(0, 10_000, 256)
+    skewed = np.where(rng.random(256) < 0.8, 7, rng.integers(0, 10_000, 256))
+    for name, keys_np in (("uniform", uniform), ("skewed", skewed)):
+        keys = jnp.asarray(keys_np, jnp.int32)
+        rows = jnp.stack([keys, keys * 2 + 1], axis=1)
+        baseline = None
+        configs = [
+            (impl, pack_impl, chunks, 1)
+            for impl in ("xla", "round_robin", "one_factorization")
+            for pack_impl in ("xla", "pallas")
+            for chunks in (1, 4)
+        ] + [("round_robin", "pallas", 4, 2)]  # + split-phase transport
+        for impl, pack_impl, chunks, transport in configs:
+            def shuffle(keys, rows, impl=impl, pack=pack_impl, ch=chunks,
+                        tc=transport):
+                return exchange.hash_shuffle(
+                    keys, rows, "x", capacity=32, impl=impl,
+                    pack_impl=pack, num_chunks=ch, transport_chunks=tc,
+                )
+            fn = shard_map(
+                shuffle, mesh=mesh, in_specs=(P("x"), P("x")),
+                out_specs=(P("x"), P("x"), P()),
+                check_vma=False,  # no replication rule for pallas_call
+            )
+            r, v, d = jax.jit(fn)(keys, rows)
+            assert int(d) == 0, (name, impl, pack_impl, chunks, int(d))
+            r, v = np.asarray(r), np.asarray(v)
+            per_dev = []
+            for j in range(8):
+                rows_j = r[j * 256:(j + 1) * 256][v[j * 256:(j + 1) * 256]]
+                order = np.lexsort(rows_j.T)
+                per_dev.append(rows_j[order])
+            if baseline is None:
+                baseline = per_dev
+                assert sum(len(b) for b in baseline) == 256
+            else:
+                for j in range(8):
+                    np.testing.assert_array_equal(
+                        per_dev[j], baseline[j],
+                        err_msg=f"{name}/{impl}/{pack_impl}/c{chunks}/dev{j}",
+                    )
+    print("PASS hash_shuffle_equiv")
+
+
+def scenario_consume_equiv():
+    """Streaming consume folds the same (chunk, src) pairs under every
+    schedule as the materialize-then-fold xla baseline."""
+    mesh = _mesh1d()
+    x = jax.random.normal(jax.random.PRNGKey(4), (64, 4))
+
+    def fold(acc, chunk, src):
+        return acc + chunk * (jnp.float32(src) + 1.0)  # src-weighted: order-free
+
+    def baseline(x):
+        y = exchange.all_to_all(x, "x", impl="xla")
+        acc = jnp.zeros((4,), x.dtype)
+        for j in range(8):
+            acc = fold(acc, y[j], j)
+        return acc
+
+    want = np.asarray(jax.jit(
+        shard_map(baseline, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+    )(x))
+    for schedule in ("shift", "one_factorization"):
+        def stream(x, schedule=schedule):
+            return exchange.scheduled_all_to_all_consume(
+                x, "x", fold, jnp.zeros((4,), x.dtype), schedule=schedule
+            )
+        got = np.asarray(jax.jit(
+            shard_map(stream, mesh=mesh, in_specs=P("x"), out_specs=P("x"))
+        )(x))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6, err_msg=schedule)
+    print("PASS consume_equiv")
+
+
+def scenario_mux_schedule_fallback():
+    """make_multiplexer downgrades one_factorization on odd-sized axes to the
+    shift schedule instead of letting an invalid config reach trace time."""
+    import warnings
+    from repro.core.multiplexer import make_multiplexer
+
+    mesh3 = jax.sharding.Mesh(np.asarray(jax.devices()[:3]), ("x",))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        mux = make_multiplexer(mesh3, impl="one_factorization")
+    assert mux.impl == "round_robin", mux.impl
+    assert any("one_factorization" in str(x.message) for x in w), [str(x.message) for x in w]
+
+    x = jax.random.normal(jax.random.PRNGKey(5), (9, 4))
+    got = np.asarray(jax.jit(shard_map(
+        lambda x: mux.all_to_all(x, "x"), mesh=mesh3, in_specs=P("x"), out_specs=P("x")
+    ))(x))
+    want = np.asarray(jax.jit(shard_map(
+        lambda x: exchange.all_to_all(x, "x", impl="xla"),
+        mesh=mesh3, in_specs=P("x"), out_specs=P("x"),
+    ))(x))
+    np.testing.assert_allclose(got, want)
+
+    mesh4 = jax.sharding.Mesh(np.asarray(jax.devices()[:4]), ("x",))
+    mux4 = make_multiplexer(mesh4, impl="one_factorization")
+    assert mux4.impl == "one_factorization", mux4.impl
+    print("PASS mux_schedule_fallback")
+
+
+def scenario_tpch_pack_equiv():
+    """Scheduled transport + Pallas fused pack matches the monolithic-XLA
+    baseline bit-exactly on the TPC-H join queries (Q17 and Q3)."""
+    from repro.relational import datagen
+    from repro.relational.distributed import q17_distributed, q3_distributed
+
+    tabs = datagen.gen_all(0.01)
+    a17 = q17_distributed(tabs["lineitem"], tabs["part"], 8,
+                          impl="xla", pack_impl="xla")
+    b17 = q17_distributed(tabs["lineitem"], tabs["part"], 8,
+                          impl="round_robin", pack_impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a17), np.asarray(b17))
+
+    a3 = q3_distributed(tabs["customer"], tabs["orders"], tabs["lineitem"], 8,
+                        impl="xla", pack_impl="xla")
+    b3 = q3_distributed(tabs["customer"], tabs["orders"], tabs["lineitem"], 8,
+                        impl="round_robin", pack_impl="pallas")
+    for k in a3:
+        np.testing.assert_array_equal(np.asarray(a3[k]), np.asarray(b3[k]))
+    print("PASS tpch_pack_equiv")
 
 
 SCENARIOS = {

@@ -119,6 +119,52 @@ def test_moe_dispatch_matches_oracle(T, E, C):
     np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_r))
 
 
+@pytest.mark.parametrize("T,B,blk", [(512, 9, 256), (300, 5, 128), (64, 3, 256),
+                                     (1000, 17, 256)])
+def test_partition_ranks_matches_arrival_order(T, B, blk):
+    dest = jax.random.randint(jax.random.fold_in(KEY, T), (T,), 0, B)
+    rank, counts = ops.partition_ranks(dest, B, block=blk)
+    with ops.use_kernels(False):
+        rank_r, counts_r = ops.partition_ranks(dest, B, block=blk)
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rank_r))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_r))
+    # oracle: arrival-order rank within each destination
+    d = np.asarray(dest)
+    want = np.zeros(T, np.int64)
+    seen: dict = {}
+    for t in range(T):
+        want[t] = seen.get(d[t], 0)
+        seen[d[t]] = want[t] + 1
+    np.testing.assert_array_equal(np.asarray(rank), want)
+    np.testing.assert_array_equal(np.asarray(counts), np.bincount(d, minlength=B))
+
+
+@pytest.mark.parametrize("T,P", [(512, 8), (300, 5), (64, 3)])
+def test_hash_partition_ranks_fused_matches_ref(T, P):
+    keys = jax.random.randint(KEY, (T,), 0, 1 << 30)
+    valid = jax.random.bernoulli(jax.random.fold_in(KEY, 9), 0.8, (T,)).astype(jnp.int32)
+    dest, rank, counts = ops.hash_partition_ranks(keys, valid, P)
+    with ops.use_kernels(False):
+        dest_r, rank_r, counts_r = ops.hash_partition_ranks(keys, valid, P)
+    np.testing.assert_array_equal(np.asarray(dest), np.asarray(dest_r))
+    np.testing.assert_array_equal(np.asarray(rank), np.asarray(rank_r))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(counts_r))
+    # dest matches the hash mod P for valid rows, overflow bin for invalid
+    pid = np.asarray(ref.fibonacci_hash_ref(keys) % jnp.uint32(P))
+    want = np.where(np.asarray(valid) != 0, pid, P)
+    np.testing.assert_array_equal(np.asarray(dest), want)
+
+
+def test_partition_pack_kernel_matches_ref_oracle():
+    from repro.kernels.hash_partition import partition_pack
+
+    dest = jax.random.randint(KEY, (512,), 0, 7)
+    hist, local = partition_pack(dest, 7, block=128)
+    hist_r, local_r = ref.partition_pack_ref(dest, 7, block=128)
+    np.testing.assert_array_equal(np.asarray(hist), np.asarray(hist_r))
+    np.testing.assert_array_equal(np.asarray(local), np.asarray(local_r))
+
+
 def test_use_kernels_toggle():
     keys = jax.random.randint(KEY, (256,), 0, 1 << 30)
     with ops.use_kernels(False):

@@ -1,0 +1,71 @@
+"""CommMultiplexer policy checks that need no optional deps and no mesh.
+
+(The multi-device behaviour — the fallback actually shuffling correctly on a
+3-device mesh — runs in tests/test_exchange_equiv.py via the subprocess
+driver.)
+"""
+
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import schedule as S
+from repro.core.multiplexer import make_multiplexer, resolve_schedule_impl
+
+
+@pytest.mark.parametrize("sizes,impl,want", [
+    ((3,), "one_factorization", "round_robin"),   # odd axis -> shift fallback
+    ((4,), "one_factorization", "one_factorization"),
+    ((2, 5), "one_factorization", "round_robin"),
+    ((1, 3), "one_factorization", "round_robin"),
+    ((1,), "one_factorization", "one_factorization"),  # size-1 axes don't shuffle
+    ((3,), "round_robin", "round_robin"),
+    ((3,), "xla", "xla"),
+])
+def test_resolve_schedule_impl(sizes, impl, want):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert resolve_schedule_impl(impl, sizes) == want
+
+
+def test_resolve_schedule_impl_warns_on_fallback():
+    with pytest.warns(UserWarning, match="one_factorization"):
+        resolve_schedule_impl("one_factorization", (3,))
+
+
+def test_make_multiplexer_single_device_mesh():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("q",))
+    for impl in ("xla", "round_robin", "one_factorization"):
+        mux = make_multiplexer(mesh, impl=impl)
+        assert mux.plan.small_axes == ("q",)
+
+
+def test_make_multiplexer_carries_pack_knobs():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("q",))
+    mux = make_multiplexer(
+        mesh, impl="round_robin", pack_impl="pallas",
+        pipeline_chunks=4, transport_chunks=2,
+    )
+    assert mux.pack_impl == "pallas"
+    assert mux.pipeline_chunks == 4
+    assert mux.transport_chunks == 2
+
+
+# -- non-hypothesis schedule invariants (run even without the test extra) ----
+
+@pytest.mark.parametrize("n", [2, 3, 5, 8, 16])
+def test_shift_schedule_verifies(n):
+    S.verify_schedule(S.shift_schedule(n))
+
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+def test_one_factorization_verifies_even(n):
+    S.verify_schedule(S.one_factorization(n))
+
+
+@pytest.mark.parametrize("n", [3, 5, 7])
+def test_one_factorization_rejects_odd(n):
+    with pytest.raises(ValueError):
+        S.one_factorization(n)

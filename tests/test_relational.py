@@ -105,12 +105,15 @@ def test_salting_reduces_overload():
     keys = (rng.zipf(1.8, size=20_000) % 1000).astype(np.int64)  # heavy head
     counts = np.bincount(keys)
     heavy = np.argsort(counts)[-8:]  # the hottest keys
+    # np.bincount refuses uint64 input (no safe cast to intp) — cast explicitly
     base = skew.straggler_excess(
-        np.bincount(skew._hash_keys(keys, 0) % np.uint64(8), minlength=8)
+        np.bincount((skew._hash_keys(keys, 0) % np.uint64(8)).astype(np.int64),
+                    minlength=8)
     )
     salted = skew.salt_keys(keys, heavy_keys=heavy, num_salts=8)
     after = skew.straggler_excess(
-        np.bincount(skew._hash_keys(salted, 0) % np.uint64(8), minlength=8)
+        np.bincount((skew._hash_keys(salted, 0) % np.uint64(8)).astype(np.int64),
+                    minlength=8)
     )
     assert after <= base
 

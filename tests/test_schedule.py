@@ -1,7 +1,14 @@
-"""Property tests for the paper's conflict-free phase schedules (Fig 10a)."""
+"""Property tests for the paper's conflict-free phase schedules (Fig 10a).
+
+``hypothesis`` is an optional test dependency; without it this module skips
+cleanly at collection (the non-property schedule checks live in
+tests/test_multiplexer.py, which has no optional deps).
+"""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test extra")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
