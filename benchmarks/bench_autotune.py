@@ -1,0 +1,139 @@
+"""Autotuner validation: modeled vs measured shuffle time across a size sweep.
+
+    PYTHONPATH=src python benchmarks/bench_autotune.py      # 8 fake devices
+    PYTHONPATH=src python -m benchmarks.run --only autotune
+
+For each message size the sweep
+
+1. prices every candidate multiplexer config with the topology cost model
+   *calibrated to this host* (``calibrate_chip`` fits effective link
+   bandwidth / launch latency / HBM bandwidth from four micro-benchmarks, so
+   the model's absolute numbers are comparable to wall-clock here — on CPU
+   fake devices in CI just as on real ICI),
+2. measures a bracket of manual configs plus the tuned argmin on the live
+   mesh, and
+3. emits, per size: modeled and measured time per config, the tuned choice,
+   ``tuned_vs_worst`` (tuned measured / worst manual measured — must be
+   <= 1: the tuner never loses to the worst hand-set knob), and
+   ``model_accuracy`` (modeled / measured for the tuned config — the
+   acceptance bar is within 2x).
+
+The pallas pack runs in interpret mode on CPU, so its *measured* walls are
+pessimistic there; the calibrated model prices the xla pack law, and the
+tuned config is re-tuned against a candidate set restricted to what the
+backend executes natively when ``--native-only`` semantics apply (here:
+measured configs use the xla pack on non-TPU backends).
+"""
+
+import os
+import sys
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.core.autotune import (
+    TableStats,
+    calibrate_chip,
+    exchange_makespan,
+    measure_shuffle_config,
+    tune_multiplexer,
+)
+
+try:
+    from .common import emit
+except ImportError:  # run as a script: benchmarks/ itself is on sys.path
+    from common import emit
+
+ROW_BYTES = 16
+# Swept sizes stay inside the calibrated range (calibrate_chip fits the
+# affine laws at 1024 and 65536 rows); extrapolating the model below the
+# smallest calibration point is not meaningful.
+SWEEP_ROWS = (1024, 4096, 16384, 65536)
+
+# The manual bracket: PR 1's hand-set default, the unscheduled baseline, and
+# two chunked variants — the knobs an operator might plausibly hand-pick.
+MANUAL_CONFIGS = (
+    ("round_robin", "xla", 1, 1),
+    ("xla", "xla", 1, 1),
+    ("round_robin", "xla", 4, 1),
+    ("round_robin", "xla", 2, 2),
+)
+
+
+def _cfg_name(impl, pack, C, t):
+    short = {"round_robin": "rr", "one_factorization": "of", "xla": "xla"}
+    return f"{short[impl]}/{pack}/C{C}/t{t}"
+
+
+def run():
+    from repro.compat import make_mesh
+
+    n = min(8, jax.device_count())
+    mesh = make_mesh((n,), ("x",))
+    if n < 2:
+        emit("autotune/skipped", "true", "", f"need >= 2 devices, have {n}")
+        return
+
+    chip = calibrate_chip(mesh, "x", row_bytes=ROW_BYTES)
+    emit("autotune/calib/link_bw", f"{chip.ici_link_bandwidth/1e9:.3f}", "GB/s",
+         "effective, this host")
+    emit("autotune/calib/launch", f"{chip.ici_launch_latency*1e6:.1f}", "us", "")
+    emit("autotune/calib/hbm_bw", f"{chip.hbm_bandwidth/1e9:.3f}", "GB/s", "")
+    emit("autotune/calib/kernel_launch",
+         f"{chip.kernel_launch_latency*1e6:.1f}", "us", "")
+
+    # CPU executes the pallas kernel in interpret mode — measured walls there
+    # say nothing about the TPU kernel, so measure with the xla pack law the
+    # calibration fitted.  On TPU both packs are native and stay in play.
+    native_packs = ("xla", "pallas") if jax.default_backend() == "tpu" else ("xla",)
+
+    for rows in SWEEP_ROWS:
+        stats = TableStats(rows=rows, row_bytes=ROW_BYTES)
+        tuned = tune_multiplexer(mesh, stats, chip=chip)
+        best = next(
+            c for c in tuned.candidates if c[1] in native_packs
+        )
+        t_impl, t_pack, t_C, t_t, t_modeled = best
+        emit(f"autotune/rows{rows}/tuned",
+             _cfg_name(t_impl, t_pack, t_C, t_t), "",
+             f"modeled {t_modeled*1e6:.1f}us")
+
+        # measure each distinct config exactly once — a repeat measurement
+        # later in the run only samples machine drift, not the config
+        bracket = dict.fromkeys(MANUAL_CONFIGS + ((t_impl, t_pack, t_C, t_t),))
+        measured = {}
+        for impl, pack, C, t in bracket:
+            if pack not in native_packs or rows % (C * t):
+                continue
+            modeled = exchange_makespan(
+                stats, n, impl, pack, C, t, chip=chip
+            )
+            wall = measure_shuffle_config(
+                mesh, "x", stats, impl=impl, pack_impl=pack,
+                pipeline_chunks=C, transport_chunks=t, max_rows=rows,
+            )
+            measured[(impl, pack, C, t)] = wall
+            emit(f"autotune/rows{rows}/modeled/{_cfg_name(impl, pack, C, t)}",
+                 f"{modeled*1e6:.1f}", "us", "")
+            emit(f"autotune/rows{rows}/measured/{_cfg_name(impl, pack, C, t)}",
+                 f"{wall*1e6:.1f}", "us", "")
+
+        tuned_wall = measured[(t_impl, t_pack, t_C, t_t)]
+        worst_manual = max(
+            w for cfg, w in measured.items() if cfg != (t_impl, t_pack, t_C, t_t)
+        )
+        emit(f"autotune/rows{rows}/tuned_vs_worst",
+             f"{tuned_wall / worst_manual:.3f}", "x",
+             "tuned measured / worst manual measured (must be <= 1)")
+        accuracy = max(t_modeled / tuned_wall, tuned_wall / t_modeled)
+        emit(f"autotune/rows{rows}/model_accuracy",
+             f"{accuracy:.3f}", "x",
+             "modeled-vs-measured gap for the tuned config (bar: <= 2x)")
+
+
+if __name__ == "__main__":
+    print("name,value,unit,note")
+    run()

@@ -9,6 +9,7 @@ dry-run artifacts (run ``python -m repro.launch.dryrun`` first).
 import argparse
 
 from . import (
+    bench_autotune,
     bench_connections,
     bench_exchange,
     bench_kernels,
@@ -26,6 +27,7 @@ SECTIONS = {
     "fig3": bench_scaling.run,       # Fig 3/11: scale-out per transport
     "fig12": bench_exchange.run,     # Fig 5/12(b) + MoE exchange A/B
     "kern": bench_kernels.run,       # kernel traffic models
+    "autotune": bench_autotune.run,  # modeled vs measured multiplexer tuning
 }
 
 

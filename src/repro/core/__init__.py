@@ -3,12 +3,15 @@
 - ``schedule``    — round-robin conflict-free phase schedules (Fig 10a)
 - ``exchange``    — decoupled exchange operators over shard_map collectives
 - ``multiplexer`` — per-mesh communication policy (the RDMA multiplexer)
+- ``autotune``    — topology-driven knob planner for the multiplexer
 - ``hybrid``      — hybrid-parallelism planner + paper cost model (§3.1)
 - ``topology``    — v5e roofline constants + switch-contention simulator
+                    + the per-phase pack/shuffle cost model
 - ``skew``        — Zipf partition-skew analysis + salting (§3.1)
 """
 
-from . import exchange, hybrid, multiplexer, schedule, skew, topology
+from . import autotune, exchange, hybrid, multiplexer, schedule, skew, topology
+from .autotune import TableStats, TunedConfig, tune_multiplexer
 from .exchange import (
     all_to_all,
     broadcast_exchange,
@@ -21,6 +24,7 @@ from .multiplexer import CommMultiplexer, make_multiplexer
 from .schedule import Schedule, make_schedule, verify_schedule
 
 __all__ = [
+    "autotune",
     "exchange",
     "hybrid",
     "multiplexer",
@@ -33,6 +37,9 @@ __all__ = [
     "hierarchical_psum_tree",
     "scheduled_all_to_all",
     "xla_all_to_all",
+    "TableStats",
+    "TunedConfig",
+    "tune_multiplexer",
     "CommMultiplexer",
     "make_multiplexer",
     "Schedule",

@@ -1,0 +1,425 @@
+"""Topology-driven autotuner for the communication multiplexer.
+
+The paper's core claim is that the transport strategy must be *derived* from
+the network's characteristics — message size vs link latency (Fig 10c),
+schedule phase count vs switch contention (Fig 10b) — not left to the
+operator.  This module closes that loop for the JAX rendition: it prices
+every legal :class:`~repro.core.multiplexer.CommMultiplexer` configuration
+with the :mod:`repro.core.topology` cost model and returns the knob setting
+that minimizes the modeled shuffle makespan.
+
+The knobs and the model
+-----------------------
+
+For one decoupled exchange of ``rows`` packed rows of ``row_bytes`` each,
+over a shuffle axis of ``n`` units, a configuration is
+
+* ``impl`` — scheduled shift phases (``"round_robin"``), bidirectional
+  pairing (``"one_factorization"``, even ``n``), or the monolithic
+  ``"xla"`` all-to-all (one launch, but contention-degraded wire time);
+* ``pack_impl`` — ``"xla"`` one-hot/cumsum (O(rows x n) HBM traffic) vs the
+  fused ``"pallas"`` partition+pack kernel (O(rows));
+* ``pipeline_chunks`` (``C``) — split the shuffle into ``C`` row chunks and
+  double-buffer: pack chunk ``k + 1`` while chunk ``k``'s phases ship;
+* ``transport_chunks`` (``t``) — split each phase message into ``t``
+  independent ppermutes (finer DMA granularity, one launch each).
+
+Per pipeline chunk the model charges ``pack_c`` =
+:func:`~repro.core.topology.pack_time` and ``ship_c`` =
+:func:`~repro.core.topology.shuffle_time` (phase launch latencies + link-load
+weighted wire time + the small counts exchange).  Chunks overlap pack with
+shipping; how much of ``min(pack_c, ship_c)`` the async scheduler can
+actually hide grows with the number of independently issued DMAs per chunk
+(``(n - 1) * t`` for scheduled impls, 1 for the monolithic all-to-all):
+
+    makespan(C) = C * (pack_c + ship_c)
+                  - (C - 1) * (1 - 1 / n_dma) * min(pack_c, ship_c)
+
+Launch latencies make both ``C`` and ``t`` costly for tiny messages (the
+model collapses to ``C = t = 1``) while large messages amortize them and buy
+overlap — the same size-driven regime change as the paper's Fig 10(c).
+
+Two modes
+---------
+
+* **analytical** (default): pure cost-model argmin — deterministic, no
+  device work, usable at trace/plan time.
+* **empirical refinement** (``refine=True``): micro-benchmark the 2-3 best
+  modeled candidates on the live mesh with a synthetic shuffle and keep the
+  measured winner — the model prunes the space, the hardware settles it.
+
+Entry points: :func:`tune_multiplexer` here, or
+``make_multiplexer(mesh, auto=True, table_stats=...)`` which applies the
+tuned knobs directly; the relational queries pass ``impl="auto"`` by default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Sequence
+
+from .topology import ChipSpec, V5E, pack_time, shuffle_time
+
+PIPELINE_CANDIDATES = (1, 2, 4, 8)
+TRANSPORT_CANDIDATES = (1, 2, 4)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableStats:
+    """Shape summary of one exchange, as seen by a single parallel unit.
+
+    ``rows`` is the per-unit row count entering the shuffle, which under the
+    zero-drop capacity bound is also the per-destination message capacity;
+    ``row_bytes`` the packed row width (int32 columns x 4).
+    """
+
+    rows: int
+    row_bytes: int
+
+    def __post_init__(self):
+        assert self.rows >= 0 and self.row_bytes > 0, (self.rows, self.row_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """A multiplexer knob setting plus the model's (and measurement's) view.
+
+    ``candidates`` holds every evaluated ``(impl, pack_impl, pipeline_chunks,
+    transport_chunks, modeled_s)`` tuple, best first — the benchmark reports
+    it, and it makes the tuner's decision auditable.
+    """
+
+    impl: str
+    pack_impl: str
+    pipeline_chunks: int
+    transport_chunks: int
+    modeled_s: float
+    measured_s: float | None = None
+    candidates: tuple = ()
+
+    def knobs(self) -> dict:
+        return dict(
+            impl=self.impl,
+            pack_impl=self.pack_impl,
+            pipeline_chunks=self.pipeline_chunks,
+            transport_chunks=self.transport_chunks,
+        )
+
+
+def exchange_makespan(
+    stats: TableStats,
+    n: int,
+    impl: str = "round_robin",
+    pack_impl: str = "xla",
+    pipeline_chunks: int = 1,
+    transport_chunks: int = 1,
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+) -> float:
+    """Modeled end-to-end time of one decoupled exchange (pack + shuffle).
+
+    See the module docstring for the pipeline-overlap formula.  Requires
+    ``pipeline_chunks`` to divide ``stats.rows`` and ``transport_chunks`` to
+    divide the per-chunk capacity — the same divisibility contract
+    ``hash_shuffle`` enforces (it falls back to unchunked otherwise).
+    """
+    if n <= 1 or stats.rows == 0:
+        return 0.0
+    C = pipeline_chunks
+    assert stats.rows % C == 0, (stats.rows, C)
+    rows_c = stats.rows // C
+    assert rows_c % transport_chunks == 0, (rows_c, transport_chunks)
+    pack_c = pack_time(rows_c, stats.row_bytes, n, chip, pack_impl)
+    ship_c = shuffle_time(
+        n, rows_c * stats.row_bytes, chip, impl, transport_chunks, topology
+    )
+    # Each chunk also ships the [n] per-destination counts (4 B messages).
+    ship_c += shuffle_time(n, 4, chip, impl, 1, topology)
+    n_dma = 1 if impl == "xla" else (n - 1) * transport_chunks
+    overlap_frac = 0.0 if (C == 1 or n_dma <= 1) else 1.0 - 1.0 / n_dma
+    return C * (pack_c + ship_c) - (C - 1) * overlap_frac * min(pack_c, ship_c)
+
+
+def _shuffle_axis(mesh) -> tuple[str | None, int]:
+    """The mesh's shuffle axis: the largest small-network (non-pod) axis."""
+    from .hybrid import plan_for_mesh
+
+    plan = plan_for_mesh(tuple(mesh.axis_names), tuple(mesh.devices.shape))
+    best, size = None, 1
+    for ax, s in zip(mesh.axis_names, mesh.devices.shape):
+        if ax not in plan.large_axes and s > size:
+            best, size = ax, s
+    return best, size
+
+
+def candidate_configs(
+    n: int, stats: Sequence[TableStats]
+) -> list[tuple[str, str, int, int]]:
+    """Every legal knob setting for these exchanges on an ``n``-unit axis.
+
+    ``pipeline_chunks`` must divide every exchange's row count (one
+    multiplexer serves the whole query) and ``transport_chunks`` every
+    per-chunk capacity; ``one_factorization`` needs even ``n``.
+    """
+    g = math.gcd(*[s.rows for s in stats]) if stats else 1
+    impls = ["round_robin", "xla"]
+    if n >= 2 and n % 2 == 0:
+        impls.insert(1, "one_factorization")
+    out = []
+    for C in PIPELINE_CANDIDATES:
+        if g % C:
+            continue
+        for t in TRANSPORT_CANDIDATES:
+            if (g // C) % t:
+                continue
+            for impl in impls:
+                if impl == "xla" and (C > 1 or t > 1):
+                    # chunking buys nothing on the monolithic transport
+                    # (no independent DMAs to overlap) — skip the redundant
+                    # configs rather than model them all as equal-or-worse.
+                    continue
+                for pack_impl in ("xla", "pallas"):
+                    out.append((impl, pack_impl, C, t))
+    return out
+
+
+def tune_multiplexer(
+    mesh,
+    table_stats: TableStats | Sequence[TableStats],
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+    axis: str | None = None,
+    refine: bool = False,
+    refine_top_k: int = 3,
+) -> TunedConfig:
+    """Choose the multiplexer knobs that minimize the modeled shuffle makespan.
+
+    ``table_stats`` describes the exchange(s) the multiplexer will carry (a
+    query with several shuffles passes one :class:`TableStats` each; the
+    model minimizes their summed makespan under the shared divisibility
+    constraints).  ``axis`` defaults to the mesh's largest small-network
+    axis.  With ``refine=True`` the ``refine_top_k`` best modeled candidates
+    are micro-benchmarked on the live mesh and the measured winner is
+    returned (``measured_s`` filled in).
+    """
+    stats = (
+        (table_stats,)
+        if isinstance(table_stats, TableStats)
+        else tuple(table_stats)
+    )
+    if axis is None:
+        axis, n = _shuffle_axis(mesh)
+    else:
+        n = int(mesh.devices.shape[list(mesh.axis_names).index(axis)])
+    if axis is None or n <= 1 or not stats or all(s.rows == 0 for s in stats):
+        return TunedConfig("round_robin", "xla", 1, 1, 0.0)
+
+    scored = []
+    for impl, pack_impl, C, t in candidate_configs(n, stats):
+        total = sum(
+            exchange_makespan(s, n, impl, pack_impl, C, t, chip, topology)
+            for s in stats
+        )
+        scored.append((total, C, t, impl, pack_impl))
+    # tie-break toward the simpler config (fewer chunks, scheduled transport)
+    scored.sort(key=lambda r: (r[0], r[1], r[2], r[3], r[4]))
+    candidates = tuple(
+        (impl, pack_impl, C, t, total) for total, C, t, impl, pack_impl in scored
+    )
+    best = scored[0]
+    measured = None
+    if refine and len(scored) > 1:
+        probe = max(stats, key=lambda s: s.rows * s.row_bytes)
+        timed = []
+        for total, C, t, impl, pack_impl in scored[:refine_top_k]:
+            wall = measure_shuffle_config(
+                mesh, axis, probe, impl=impl, pack_impl=pack_impl,
+                pipeline_chunks=C, transport_chunks=t,
+            )
+            timed.append((wall, (total, C, t, impl, pack_impl)))
+        timed.sort(key=lambda r: r[0])
+        measured, best = timed[0]
+    total, C, t, impl, pack_impl = best
+    return TunedConfig(
+        impl=impl,
+        pack_impl=pack_impl,
+        pipeline_chunks=C,
+        transport_chunks=t,
+        modeled_s=total,
+        measured_s=measured,
+        candidates=candidates,
+    )
+
+
+# ----------------------------------------------------------------------------
+# Empirical refinement: micro-benchmark a config on the live mesh.
+# ----------------------------------------------------------------------------
+
+def _best_wall(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Min wall seconds over ``iters`` runs — the standard microbenchmark
+    reducer: the minimum is the run least disturbed by scheduler noise."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    walls = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        walls.append(time.perf_counter() - t0)
+    return min(walls)
+
+
+def measure_shuffle_config(
+    mesh,
+    axis: str,
+    stats: TableStats,
+    impl: str = "round_robin",
+    pack_impl: str = "xla",
+    pipeline_chunks: int = 1,
+    transport_chunks: int = 1,
+    iters: int = 3,
+    max_rows: int | None = None,
+) -> float:
+    """Min wall seconds (over ``iters`` runs) of one ``hash_shuffle``.
+
+    Runs a synthetic exchange (uniform int32 keys, ``stats.row_bytes`` wide
+    rows, zero-drop capacity) through a real multiplexer on the live mesh,
+    at the *actual* ``stats.rows`` by default — measuring in a smaller-size
+    regime would systematically undo the tuner's size-driven decisions
+    (chunking only pays above a message-size threshold).  Pass ``max_rows``
+    to cap the probe when a cheaper, regime-*approximate* measurement is
+    acceptable; rows are then re-aligned to keep chunk divisibility.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from .multiplexer import make_multiplexer
+
+    n = int(mesh.devices.shape[list(mesh.axis_names).index(axis)])
+    rows = stats.rows if max_rows is None else min(stats.rows, max_rows)
+    step = pipeline_chunks * transport_chunks  # C | rows and t | rows/C
+    rows = max(step, rows - rows % step)
+    width = max(1, stats.row_bytes // 4)
+    mux = make_multiplexer(
+        mesh, impl=impl, pack_impl=pack_impl,
+        pipeline_chunks=pipeline_chunks, transport_chunks=transport_chunks,
+    )
+
+    key = jax.random.PRNGKey(0)
+    keys = jax.random.randint(key, (rows * n,), 0, 1 << 30, dtype=jnp.int32)
+    data = jax.random.randint(
+        jax.random.fold_in(key, 1), (rows * n, width), 0, 1 << 20,
+        dtype=jnp.int32,
+    )
+
+    def body(k, r):
+        out_rows, out_valid, dropped = mux.hash_shuffle(
+            k, r, axis, capacity=rows
+        )
+        return out_rows.sum() + out_valid.sum() + dropped
+
+    fn = jax.jit(
+        shard_map(
+            body, mesh=mesh, in_specs=(P(axis), P(axis)), out_specs=P(),
+            check_vma=False,
+        )
+    )
+    return _best_wall(fn, keys, data, iters=iters)
+
+
+def calibrate_chip(
+    mesh,
+    axis: str,
+    chip: ChipSpec = V5E,
+    message_rows: Sequence[int] = (1024, 65536),
+    row_bytes: int = 16,
+) -> ChipSpec:
+    """Fit the cost model's constants to the machine actually running.
+
+    The model is two affine laws — shuffle wall = launches + bytes/link_bw,
+    pack wall = dispatch + touched/hbm_bw.  Measuring each at a small and a
+    large size and solving the 2x2 system yields *effective* link bandwidth,
+    launch latency, HBM bandwidth and dispatch cost for whatever backend is
+    underneath (CPU fake devices in CI, real ICI on TPU).  The returned spec
+    makes ``exchange_makespan`` directly comparable to wall-clock on this
+    host — which is how ``benchmarks/bench_autotune.py`` validates the model.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from . import exchange
+    from .schedule import make_schedule, schedule_ring_loads
+
+    n = int(mesh.devices.shape[list(mesh.axis_names).index(axis)])
+    if n <= 1:
+        return chip
+    load_sum = sum(schedule_ring_loads(make_schedule(n, "shift")))
+    width = max(1, row_bytes // 4)
+
+    # -- link law: scheduled all_to_all wall at two message sizes ----------
+    walls, sizes = [], []
+    for rows in message_rows:
+        x = jax.random.randint(
+            jax.random.PRNGKey(rows), (n * n, rows, width), 0, 1 << 20,
+            dtype=jnp.int32,
+        )
+        fn = jax.jit(
+            shard_map(
+                lambda v: exchange.all_to_all(v, axis, impl="round_robin"),
+                mesh=mesh, in_specs=P(axis), out_specs=P(axis),
+            )
+        )
+        walls.append(_best_wall(fn, x))
+        sizes.append(rows * width * 4)
+    slope = (walls[-1] - walls[0]) / max(sizes[-1] - sizes[0], 1)
+    slope = max(slope, 1e-15)
+    intercept = max(walls[0] - slope * sizes[0], 1e-9)
+    link_bw = load_sum / slope
+    launch = intercept / (n - 1)
+
+    # -- pack law: pack_by_destination wall at two row counts --------------
+    pk_walls, pk_bytes = [], []
+    for rows in message_rows:
+        dest = jax.random.randint(
+            jax.random.PRNGKey(rows + 1), (rows,), 0, n, dtype=jnp.int32
+        )
+        data = jax.random.randint(
+            jax.random.PRNGKey(rows + 2), (rows, width), 0, 1 << 20,
+            dtype=jnp.int32,
+        )
+        fn = jax.jit(
+            lambda d, r: exchange.pack_by_destination(d, r, n, rows, impl="xla")
+        )
+        pk_walls.append(_best_wall(fn, dest, data))
+        # same bytes-touched expression as pack_time(impl="xla")
+        pk_bytes.append(rows * 12 * (n + 1) + 8 * rows + 2 * rows * row_bytes)
+    pk_slope = (pk_walls[-1] - pk_walls[0]) / max(pk_bytes[-1] - pk_bytes[0], 1)
+    pk_slope = max(pk_slope, 1e-15)
+    pk_intercept = max(pk_walls[0] - pk_slope * pk_bytes[0], 1e-9)
+
+    return dataclasses.replace(
+        chip,
+        name=chip.name + "-calibrated",
+        ici_link_bandwidth=link_bw,
+        ici_launch_latency=launch,
+        hbm_bandwidth=1.0 / pk_slope,
+        kernel_launch_latency=pk_intercept,
+    )
+
+
+__all__ = [
+    "TableStats",
+    "TunedConfig",
+    "exchange_makespan",
+    "candidate_configs",
+    "tune_multiplexer",
+    "measure_shuffle_config",
+    "calibrate_chip",
+]

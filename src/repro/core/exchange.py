@@ -34,10 +34,28 @@ pipeline* (``num_chunks > 1``): rows are split into chunks, and chunk
 pack has no data dependence on the in-flight shuffle, so XLA's async
 scheduler can overlap partition compute with DMA — the TPU rendition of the
 paper's multiplexer sending message ``k`` while the workers fill ``k + 1``.
+``transport_chunks`` further splits each phase's message into independent
+ppermutes (finer DMA granularity at one extra launch each).
+
+The chunking contract (enforced by assertions here; the multiplexer layer
+pre-checks and falls back with a warning instead): ``num_chunks`` divides
+both the row count and ``capacity``, and ``transport_chunks`` divides the
+per-chunk capacity ``capacity / num_chunks``.  Every (impl, pack_impl,
+chunking) combination delivers the same rows to the same devices; only the
+padding layout differs (chunked shuffles pad at chunk boundaries).
+
+Overflow semantics: packing is capacity-bounded (fixed-size message
+buffers, the paper's registered message pool), so rows beyond a
+destination's capacity are *counted, not shipped* — :func:`hash_shuffle`
+returns the psum'd ``dropped`` total and callers decide the policy.  The
+relational layer (:mod:`repro.relational.distributed`) sizes capacity to
+the static zero-drop bound and raises on any nonzero count: overflow is an
+error, never silent row loss.
 
 Everything here must be called inside ``shard_map`` (a named mesh axis in
 scope).  The pjit/auto-sharded layers above call these through
-:mod:`repro.core.multiplexer`.
+:mod:`repro.core.multiplexer`, which owns the knob *values* — hand-set or
+derived from the topology cost model by :mod:`repro.core.autotune`.
 """
 
 from __future__ import annotations

@@ -22,11 +22,31 @@ Beyond the transport (``impl``), the multiplexer carries the partition/pack
 policy for :meth:`CommMultiplexer.hash_shuffle`:
 
 * ``pack_impl`` — ``"xla"`` (one-hot/cumsum reference) or ``"pallas"`` (the
-  fused partition+pack kernel; no ``[rows, num_dest]`` intermediate);
+  fused partition+pack kernel; no ``[rows, num_dest]`` intermediate).  Both
+  produce bit-identical buffers, counts, and drop counts.
 * ``pipeline_chunks`` — split the shuffle into this many row chunks and
-  double-buffer: pack chunk ``k + 1`` while chunk ``k``'s phases ship;
+  double-buffer: pack chunk ``k + 1`` while chunk ``k``'s phases ship.
+  Must divide both the row count and the capacity of every shuffle routed
+  through this multiplexer; a shuffle it does not divide runs unchunked
+  (with a warning) rather than failing.
 * ``transport_chunks`` — split each scheduled phase's message into this many
-  independent ppermutes (finer-grained DMA pipelining).
+  independent ppermutes (finer-grained DMA pipelining).  Must divide the
+  per-chunk capacity; falls back to whole messages (with a warning)
+  otherwise.  The monolithic ``"xla"`` transport ignores it.
+
+None of the knobs changes *what* is delivered — only how it is packed and
+phased; ``tests/test_exchange_equiv.py`` holds every combination to the same
+results.  Capacity overflow is likewise policy-free: ``hash_shuffle``
+returns a psum'd ``dropped`` count and the relational layer raises on any
+nonzero value (PR 1's overflow-raises contract) — rows are never silently
+lost.
+
+Knob values come from one of two places: explicit arguments to
+:func:`make_multiplexer` (benchmarks, A/B tests), or — the default on the
+query paths — the topology-driven autotuner
+(:func:`repro.core.autotune.tune_multiplexer` via
+``make_multiplexer(auto=True, table_stats=...)``), which minimizes the
+modeled pack+shuffle makespan for the actual message sizes and mesh.
 """
 
 from __future__ import annotations
@@ -41,6 +61,7 @@ import jax
 from . import exchange
 from .hybrid import HybridPlan, plan_for_mesh
 from .schedule import make_schedule, verify_schedule
+from .topology import ChipSpec, V5E
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +170,13 @@ class CommMultiplexer:
         return exchange.flat_psum_tree(tree, data_axes)
 
 
+# one_factorization->shift downgrade warnings already issued, keyed by the
+# offending axis sizes — a long-lived process builds a multiplexer per query,
+# and repeating the identical warning every time is pure noise.  (Tests that
+# assert the warning clear this set first.)
+_warned_odd_axis_sizes: set[tuple[int, ...]] = set()
+
+
 def resolve_schedule_impl(
     impl: exchange.AllToAllImpl, small_axis_sizes: Sequence[int]
 ) -> exchange.AllToAllImpl:
@@ -158,17 +186,21 @@ def resolve_schedule_impl(
     for even ``n``; on a mesh with an odd-sized shuffle axis the schedule
     constructor would raise at trace time, *inside* the first query.  Fall
     back to the ``shift`` schedule (valid for every ``n``, and what the
-    paper itself uses) at multiplexer-build time instead, with a warning.
+    paper itself uses) at multiplexer-build time instead, with a warning —
+    issued once per distinct set of odd axis sizes, not per call.
     """
     if impl == "one_factorization" and any(
         s > 1 and s % 2 for s in small_axis_sizes
     ):
-        odd = [s for s in small_axis_sizes if s > 1 and s % 2]
-        warnings.warn(
-            f"one_factorization schedules need even axis sizes, got {odd}; "
-            "falling back to the round_robin (shift) schedule",
-            stacklevel=3,
-        )
+        odd = tuple(s for s in small_axis_sizes if s > 1 and s % 2)
+        if odd not in _warned_odd_axis_sizes:
+            _warned_odd_axis_sizes.add(odd)
+            warnings.warn(
+                f"one_factorization schedules need even axis sizes, got "
+                f"{list(odd)}; falling back to the round_robin (shift) "
+                "schedule",
+                stacklevel=3,
+            )
         return "round_robin"
     return impl
 
@@ -179,6 +211,11 @@ def make_multiplexer(
     pack_impl: exchange.PackImpl = "xla",
     pipeline_chunks: int = 1,
     transport_chunks: int = 1,
+    auto: bool = False,
+    table_stats=None,
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+    refine: bool = False,
 ) -> CommMultiplexer:
     """Build the multiplexer for a mesh; verifies the schedule once (cheap).
 
@@ -187,7 +224,31 @@ def make_multiplexer(
     eligible) axis's schedule is verified here — an impl the mesh cannot
     support is downgraded by :func:`resolve_schedule_impl` rather than
     letting an invalid config reach the runtime.
+
+    With ``auto=True`` (or ``impl="auto"``) every knob — transport,
+    ``pack_impl``, ``pipeline_chunks``, ``transport_chunks`` — is derived
+    from the :mod:`repro.core.topology` cost model by
+    :func:`repro.core.autotune.tune_multiplexer` instead of taken from the
+    arguments.  ``table_stats`` (one :class:`repro.core.autotune.TableStats`
+    per exchange the multiplexer will carry) is required; ``chip`` /
+    ``topology`` select the hardware model and ``refine=True`` additionally
+    micro-benchmarks the best modeled candidates on the live mesh.
     """
+    if auto or impl == "auto":
+        from .autotune import tune_multiplexer
+
+        if table_stats is None:
+            raise ValueError(
+                "make_multiplexer(auto=True) needs table_stats — the "
+                "rows/row_bytes of the exchanges this multiplexer will carry"
+            )
+        tuned = tune_multiplexer(
+            mesh, table_stats, chip=chip, topology=topology, refine=refine
+        )
+        impl = tuned.impl
+        pack_impl = tuned.pack_impl
+        pipeline_chunks = tuned.pipeline_chunks
+        transport_chunks = tuned.transport_chunks
     plan = plan_for_mesh(
         tuple(mesh.axis_names), tuple(mesh.devices.shape), exchange=(
             "xla" if impl == "xla" else "round_robin"

@@ -151,6 +151,37 @@ def ring_hops(n: int, shift: int) -> int:
     return min(shift, n - shift)
 
 
+def ring_phase_load(phase: Phase, n: int) -> int:
+    """Peak link load of one phase on a bidirectional ring, short-way routed.
+
+    Each message ``(s, d)`` occupies every link on its minimal ring path
+    (clockwise if ``(d - s) mod n <= n/2``, counter-clockwise otherwise; ties
+    go clockwise).  Links are directed, so the two directions don't contend.
+    The returned value is the number of messages sharing the busiest link —
+    the factor by which that phase's wire time stretches relative to a
+    contention-free hop (load 1).  A cyclic shift by ``+-1`` has load 1; a
+    shift by ``k`` has load ``min(k, n - k)`` (= :func:`ring_hops`).
+    """
+    cw = [0] * n  # cw[i]: link i -> i+1
+    ccw = [0] * n  # ccw[i]: link i -> i-1
+    for s, d in phase:
+        fwd = (d - s) % n
+        if fwd == 0:
+            continue
+        if fwd <= n - fwd:
+            for h in range(fwd):
+                cw[(s + h) % n] += 1
+        else:
+            for h in range(n - fwd):
+                ccw[(s - h) % n] += 1
+    return max(max(cw), max(ccw))
+
+
+def schedule_ring_loads(schedule: Schedule) -> list[int]:
+    """Per-phase peak ring-link loads (see :func:`ring_phase_load`)."""
+    return [ring_phase_load(p, schedule.n) for p in schedule.phases]
+
+
 def schedule_link_time(
     n: int,
     bytes_per_pair: float,
@@ -185,5 +216,7 @@ __all__ = [
     "verify_schedule",
     "make_schedule",
     "ring_hops",
+    "ring_phase_load",
+    "schedule_ring_loads",
     "schedule_link_time",
 ]

@@ -23,7 +23,14 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class ChipSpec:
-    """Per-chip roofline constants (TPU v5e, the assignment's target)."""
+    """Per-chip roofline constants (TPU v5e, the assignment's target).
+
+    ``ici_launch_latency`` is the fixed cost of issuing one collective-permute
+    (DMA descriptor setup + phase sync) — the TPU analogue of the paper's
+    ~1 us inline synchronization message (Fig 10c).  ``kernel_launch_latency``
+    is the fixed cost of one pack-kernel dispatch.  Both feed the autotuner's
+    per-phase cost model (:func:`phase_time`, :func:`pack_time`).
+    """
 
     name: str = "tpu-v5e"
     peak_flops_bf16: float = 197e12  # FLOP/s
@@ -33,6 +40,8 @@ class ChipSpec:
     dci_bandwidth: float = 25e9  # B/s per chip cross-pod (optical, scarcer)
     hbm_bytes: int = 16 * 2**30
     vmem_bytes: int = 128 * 2**20
+    ici_launch_latency: float = 2e-6  # s per issued ppermute phase
+    kernel_launch_latency: float = 1e-6  # s per pack-kernel dispatch
 
 
 V5E = ChipSpec()
@@ -195,6 +204,124 @@ def scheduled_vs_unscheduled_speedup(n: int, **kw) -> float:
     return 1.0 / contention_factor(n)
 
 
+# ----------------------------------------------------------------------------
+# Per-phase cost model (feeds repro.core.autotune.tune_multiplexer).
+#
+# The paper's argument (§3.2.3, Fig 10b/c) is that the right transport
+# strategy follows from message size vs link latency and schedule phase count
+# vs switch contention — so the model below prices exactly those terms:
+# pack compute against HBM bandwidth, each ppermute phase as launch latency
+# plus wire time, and the unscheduled baseline degraded by the simulated
+# contention factor.
+# ----------------------------------------------------------------------------
+
+PACK_IMPLS = ("xla", "pallas")
+
+
+def pack_time(
+    rows: int,
+    row_bytes: float,
+    num_dest: int,
+    chip: ChipSpec = V5E,
+    impl: str = "xla",
+) -> float:
+    """Modeled partition+pack time for one pipeline chunk (HBM-bound).
+
+    The pack is pure data movement — hash, rank, scatter — so it is priced as
+    bytes touched over HBM bandwidth plus one kernel dispatch:
+
+    * ``"xla"`` (one-hot/cumsum reference): materializes and re-reads a
+      ``[rows, num_dest + 1]`` int32 one-hot (write + cumsum read/write =
+      3 passes), then gathers ranks and scatters the rows — the
+      O(rows x destinations) term that dominates as the mesh grows.
+    * ``"pallas"`` (fused partition+pack kernel): one pass over keys and
+      ranks plus the ``[nblocks, bins]`` histogram scan; the scatter
+      epilogue reads and writes each row once.  Cost scales with
+      ``rows + nblocks x destinations``.
+    """
+    if rows <= 0:
+        return 0.0
+    bins = num_dest + 1  # + overflow bucket for invalid rows
+    scatter = 2 * rows * row_bytes  # read rows + write buffers (both impls)
+    if impl == "xla":
+        touched = rows * 12 * bins + 8 * rows + scatter
+    elif impl == "pallas":
+        nblocks = max(1, -(-rows // 256))
+        touched = 8 * rows + 12 * nblocks * bins + scatter
+    else:
+        raise ValueError(f"unknown pack impl {impl!r}")
+    return chip.kernel_launch_latency + touched / chip.hbm_bandwidth
+
+
+def phase_time(
+    message_bytes: float,
+    chip: ChipSpec = V5E,
+    transport_chunks: int = 1,
+    link_load: int = 1,
+) -> float:
+    """One scheduled shuffle phase: launch latency per sub-message + wire time.
+
+    ``transport_chunks`` splits the phase message into that many independent
+    ppermutes — each pays the launch latency, the wire time is unchanged.
+    ``link_load`` is the number of messages sharing the phase's busiest link
+    (1 on a non-blocking switch; :func:`repro.core.schedule.ring_phase_load`
+    on a torus ring), which stretches the wire time proportionally.
+    """
+    wire = link_load * message_bytes / chip.ici_link_bandwidth
+    return transport_chunks * chip.ici_launch_latency + wire
+
+
+def shuffle_time(
+    n: int,
+    message_bytes: float,
+    chip: ChipSpec = V5E,
+    impl: str = "round_robin",
+    transport_chunks: int = 1,
+    topology: str = "switch",
+) -> float:
+    """Modeled all-to-all time: ``message_bytes`` from each unit to each peer.
+
+    * scheduled impls (``"round_robin"`` = shift schedule,
+      ``"one_factorization"``): a sum of :func:`phase_time` over the
+      schedule's ``n - 1`` phases.  With ``topology="switch"`` every phase is
+      contention-free (the paper's non-blocking switch; at zero launch
+      latency this equals ``schedule_link_time(..., scheduled=True)``); with
+      ``topology="ring"`` each phase's wire time is stretched by its peak
+      ring-link load (multi-hop shifts share links).
+    * ``"xla"`` (the monolithic all-to-all): one launch.  On a switch it is
+      the paper's *unscheduled* baseline — total wire time degraded by the
+      simulated contention factor (:func:`contention_factor`), matching
+      ``schedule_link_time(..., scheduled=False)``.  On a ring there is no
+      uncoordinated-switch to contend for: the compiler schedules the
+      collective over the same links, so it pays the same link-load wire
+      bound as the shift schedule with a single launch — its real cost
+      relative to the scheduled impls is that one monolithic DMA cannot be
+      pipelined against pack compute (see the autotuner's overlap term).
+    """
+    from .schedule import make_schedule, schedule_ring_loads
+
+    if n <= 1 or message_bytes <= 0:
+        return 0.0
+    if impl == "xla":
+        if topology == "ring":
+            loads = schedule_ring_loads(make_schedule(n, "shift"))
+            wire = sum(loads) * message_bytes / chip.ici_link_bandwidth
+            return chip.ici_launch_latency + wire
+        wire = (n - 1) * message_bytes / chip.ici_link_bandwidth
+        return chip.ici_launch_latency + wire / contention_factor(n)
+    kind = "shift" if impl == "round_robin" else impl
+    sched = make_schedule(n, kind)
+    if topology == "ring":
+        loads = schedule_ring_loads(sched)
+    elif topology == "switch":
+        loads = [1] * sched.num_phases
+    else:
+        raise ValueError(f"unknown topology {topology!r}")
+    return sum(
+        phase_time(message_bytes, chip, transport_chunks, load) for load in loads
+    )
+
+
 def sync_amortization(
     message_bytes: float,
     link_bandwidth: float = V5E.ici_link_bandwidth,
@@ -218,5 +345,8 @@ __all__ = [
     "simulate_contention_factor",
     "contention_factor",
     "scheduled_vs_unscheduled_speedup",
+    "pack_time",
+    "phase_time",
+    "shuffle_time",
     "sync_amortization",
 ]

@@ -13,17 +13,23 @@ serialization — column pruning happens before the pack).
 
 All exchanges are routed through a :class:`repro.core.multiplexer
 .CommMultiplexer` built once per query ("decoupled": the query plans never
-pick transports themselves).  The queries expose the multiplexer's knobs —
-``impl`` (transport), ``pack_impl`` (``"xla"`` one-hot reference vs
-``"pallas"`` fused partition+pack kernel) and ``num_chunks`` (chunked
-double-buffered shuffle pipeline).  Every partition exchange's capacity is
-the static zero-drop bound, and the psum'd drop count of each exchange is
-checked after execution — capacity overflow raises instead of silently
-losing rows.
+pick transports themselves).  By default (``impl="auto"``) every
+multiplexer knob — transport, ``pack_impl``, ``pipeline_chunks``,
+``transport_chunks`` — is derived from the topology cost model by
+:func:`repro.core.autotune.tune_multiplexer`, fed the per-shard row counts
+and packed row widths of the query's own exchanges.  Passing an explicit
+``impl`` (plus optional ``pack_impl`` / ``num_chunks``) bypasses the tuner
+— that is what the A/B benchmarks and equivalence tests do — and passing
+only ``pack_impl`` / ``num_chunks`` under ``impl="auto"`` pins just those
+knobs while the tuner picks the rest.  Every
+partition exchange's capacity is the static zero-drop bound, and the psum'd
+drop count of each exchange is checked after execution — capacity overflow
+raises instead of silently losing rows.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from functools import partial
 
@@ -33,6 +39,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import make_mesh, shard_map
+from repro.core.autotune import TableStats
 from repro.core.multiplexer import CommMultiplexer, make_multiplexer
 from . import operators as ops
 from . import queries as Q
@@ -45,10 +52,37 @@ def _mesh(num_shards: int):
 
 
 def _make_mux(
-    mesh, impl: str, pack_impl: str = "xla", num_chunks: int = 1
+    mesh, impl: str, pack_impl: str | None = None, num_chunks: int | None = None,
+    stats: list[TableStats] | None = None,
 ) -> CommMultiplexer:
+    """One multiplexer per query.
+
+    ``impl="auto"`` hands the knobs to the topology autotuner, fed ``stats``
+    (one entry per exchange in the plan); an explicitly passed ``pack_impl``
+    / ``num_chunks`` (non-``None``) pins that knob even under auto.  An
+    explicit ``impl`` uses the caller's knobs verbatim, with the pre-tuner
+    defaults (``"xla"`` pack, unchunked) for anything left unset."""
+    if impl == "auto":
+        mux = make_multiplexer(mesh, auto=True, table_stats=stats or ())
+        if pack_impl is not None or num_chunks is not None:
+            mux = dataclasses.replace(
+                mux,
+                pack_impl=pack_impl if pack_impl is not None else mux.pack_impl,
+                pipeline_chunks=(
+                    num_chunks if num_chunks is not None else mux.pipeline_chunks
+                ),
+            )
+        return mux
     return make_multiplexer(
-        mesh, impl=impl, pack_impl=pack_impl, pipeline_chunks=num_chunks
+        mesh, impl=impl, pack_impl=pack_impl or "xla",
+        pipeline_chunks=num_chunks or 1,
+    )
+
+
+def _exchange_stats(prepped: Table, num_shards: int, num_cols: int) -> TableStats:
+    """Cost-model view of one exchange: per-shard rows x packed row bytes."""
+    return TableStats(
+        rows=prepped.capacity // num_shards, row_bytes=4 * num_cols
     )
 
 
@@ -151,14 +185,15 @@ def q17_distributed(
     num_shards: int,
     brand: int = 12,
     container: int = 2,
-    impl: str = "round_robin",
-    pack_impl: str = "xla",
-    num_chunks: int = 1,
+    impl: str = "auto",
+    pack_impl: str | None = None,
+    num_chunks: int | None = None,
 ):
     li = _prep(lineitem, num_shards)
     pt = _prep(part, num_shards)
     mesh = _mesh(num_shards)
-    mux = _make_mux(mesh, impl, pack_impl, num_chunks)
+    mux = _make_mux(mesh, impl, pack_impl, num_chunks,
+                    stats=[_exchange_stats(li, num_shards, 3)])
     planner = PlannerConfig(num_units=num_shards, hybrid=True)
     strategy = choose_join_strategy(
         small_rows=part.capacity, large_rows=lineitem.capacity, cfg=planner
@@ -198,15 +233,20 @@ def q3_distributed(
     lineitem: Table,
     num_shards: int,
     segment: int = 1,
-    impl: str = "round_robin",
-    pack_impl: str = "xla",
-    num_chunks: int = 1,
+    impl: str = "auto",
+    pack_impl: str | None = None,
+    num_chunks: int | None = None,
 ):
     cu = _prep(customer, num_shards)
     od = _prep(orders, num_shards)
     li = _prep(lineitem, num_shards)
     mesh = _mesh(num_shards)
-    mux = _make_mux(mesh, impl, pack_impl, num_chunks)
+    mux = _make_mux(mesh, impl, pack_impl, num_chunks, stats=[
+        _exchange_stats(cu, num_shards, 2),   # customer by c_custkey
+        _exchange_stats(od, num_shards, 3),   # orders by o_custkey
+        _exchange_stats(od, num_shards, 2),   # joined orders by o_orderkey
+        _exchange_stats(li, num_shards, 4),   # lineitem by l_orderkey
+    ])
     from .datagen import date_to_days
 
     cutoff = date_to_days(1995, 3, 15)
@@ -275,12 +315,13 @@ def _partkey_join_plan(query_fn, part_cols_needed):
     """Shared plan for Q14/Q19: partition lineitem by l_partkey, broadcast
     the (much smaller) part side — the hybrid planner's broadcast rule."""
 
-    def run(lineitem: Table, part: Table, num_shards: int, impl: str = "round_robin",
-            pack_impl: str = "xla", num_chunks: int = 1, **kw):
+    def run(lineitem: Table, part: Table, num_shards: int, impl: str = "auto",
+            pack_impl: str | None = None, num_chunks: int | None = None, **kw):
         li = _prep(lineitem, num_shards)
         pt = _prep(part, num_shards)
         mesh = _mesh(num_shards)
-        mux = _make_mux(mesh, impl, pack_impl, num_chunks)
+        mux = _make_mux(mesh, impl, pack_impl, num_chunks,
+                        stats=[_exchange_stats(li, num_shards, 5)])
 
         def body(li_cols, li_valid, pt_cols, pt_valid):
             li_t, dropped = _exchange_by_key(
@@ -306,7 +347,7 @@ def _partkey_join_plan(query_fn, part_cols_needed):
     return run
 
 
-def q14_distributed(lineitem, part, num_shards, impl="round_robin", **kw):
+def q14_distributed(lineitem, part, num_shards, impl="auto", **kw):
     run = _partkey_join_plan(
         lambda li, pt, **k: Q.q14_local(li, pt, **k),
         ["p_partkey", "p_brand"],
@@ -315,7 +356,7 @@ def q14_distributed(lineitem, part, num_shards, impl="round_robin", **kw):
     return Q.q14_finalize(promo, total)
 
 
-def q19_distributed(lineitem, part, num_shards, impl="round_robin", **kw):
+def q19_distributed(lineitem, part, num_shards, impl="auto", **kw):
     run = _partkey_join_plan(
         lambda li, pt, **k: Q.q19_local(li, pt, **k),
         ["p_partkey", "p_brand", "p_container", "p_size"],

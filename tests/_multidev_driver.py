@@ -344,6 +344,48 @@ def scenario_mux_schedule_fallback():
     print("PASS mux_schedule_fallback")
 
 
+def scenario_autotune_mux():
+    """An auto-tuned multiplexer (knobs from the topology cost model, no
+    hand-set values) shuffles identically to the monolithic-XLA baseline,
+    and empirical refinement picks a measured winner on the live mesh."""
+    from repro.core.autotune import TableStats, tune_multiplexer
+    from repro.core.multiplexer import make_multiplexer
+
+    mesh = _mesh1d()
+    rows_per_dev = 64
+    stats = TableStats(rows=rows_per_dev, row_bytes=8)
+    mux = make_multiplexer(mesh, auto=True, table_stats=stats)
+    assert mux.pipeline_chunks >= 1 and mux.transport_chunks >= 1
+    assert mux.impl in ("xla", "round_robin", "one_factorization")
+
+    keys = jax.random.randint(jax.random.PRNGKey(7), (8 * rows_per_dev,), 0, 10_000)
+    rows = jnp.stack([keys, keys * 3 + 1], axis=1).astype(jnp.int32)
+
+    def shuffle(mux):
+        def body(k, r):
+            return mux.hash_shuffle(k, r, "x", capacity=rows_per_dev)
+        return jax.jit(shard_map(
+            body, mesh=mesh, in_specs=(P("x"), P("x")),
+            out_specs=(P("x"), P("x"), P()), check_vma=False,
+        ))
+
+    r_auto, v_auto, d_auto = shuffle(mux)(keys.astype(jnp.int32), rows)
+    base = make_multiplexer(mesh, impl="xla", pack_impl="xla")
+    r_ref, v_ref, d_ref = shuffle(base)(keys.astype(jnp.int32), rows)
+    assert int(d_auto) == 0 and int(d_ref) == 0
+    for j in range(8):
+        sl = slice(j * 8 * rows_per_dev, (j + 1) * 8 * rows_per_dev)
+        got = np.asarray(r_auto)[sl][np.asarray(v_auto)[sl]]
+        want = np.asarray(r_ref)[sl][np.asarray(v_ref)[sl]]
+        np.testing.assert_array_equal(
+            got[np.lexsort(got.T)], want[np.lexsort(want.T)], err_msg=f"dev{j}"
+        )
+
+    refined = tune_multiplexer(mesh, stats, refine=True, refine_top_k=2)
+    assert refined.measured_s is not None and refined.measured_s > 0
+    print("PASS autotune_mux")
+
+
 def scenario_tpch_pack_equiv():
     """Scheduled transport + Pallas fused pack matches the monolithic-XLA
     baseline bit-exactly on the TPC-H join queries (Q17 and Q3)."""

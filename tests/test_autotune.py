@@ -1,0 +1,164 @@
+"""Cost-model and autotuner invariants (pure model — no multi-device mesh).
+
+The live-mesh behaviour (auto-tuned multiplexer shuffling correctly on 8
+fake devices, empirical refinement) runs in tests/test_exchange_equiv.py via
+the subprocess driver.
+"""
+
+import dataclasses
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import schedule as S
+from repro.core import topology as T
+from repro.core.autotune import (
+    TableStats,
+    candidate_configs,
+    exchange_makespan,
+    tune_multiplexer,
+)
+from repro.core.multiplexer import make_multiplexer
+
+# Zero launch latencies isolate the wire/HBM terms of the model.
+ZERO_LAT = dataclasses.replace(
+    T.V5E, ici_launch_latency=0.0, kernel_launch_latency=0.0
+)
+
+
+def _mesh8():
+    """Mesh stand-in: the tuner only reads axis_names and devices.shape."""
+    return types.SimpleNamespace(axis_names=("q",), devices=np.empty((8,)))
+
+
+# ----------------------------------------------------------------------------
+# The per-phase cost functions.
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16])
+@pytest.mark.parametrize("msg", [1e3, 1e6])
+def test_shuffle_time_agrees_with_schedule_link_time(n, msg):
+    """On a non-blocking switch at zero launch latency, the per-phase model
+    sums to exactly the analytic schedule_link_time — scheduled and not."""
+    got = T.shuffle_time(n, msg, ZERO_LAT, "round_robin", 1, "switch")
+    want = S.schedule_link_time(
+        n, msg, ZERO_LAT.ici_link_bandwidth, scheduled=True
+    )
+    assert got == pytest.approx(want)
+
+    got_x = T.shuffle_time(n, msg, ZERO_LAT, "xla", 1, "switch")
+    want_x = S.schedule_link_time(
+        n, msg, ZERO_LAT.ici_link_bandwidth, scheduled=False
+    )
+    assert got_x == pytest.approx(want_x)
+
+
+def test_exchange_makespan_agrees_at_chunks1():
+    """At chunks=1 the makespan is exactly pack + data phases + counts phases
+    (no overlap term), i.e. schedule_link_time plus the launch budget."""
+    stats = TableStats(rows=1024, row_bytes=16)
+    n = 8
+    got = exchange_makespan(
+        stats, n, "round_robin", "xla", 1, 1, ZERO_LAT, "switch"
+    )
+    bw = ZERO_LAT.ici_link_bandwidth
+    want = (
+        T.pack_time(1024, 16, n, ZERO_LAT, "xla")
+        + S.schedule_link_time(n, 1024 * 16, bw, scheduled=True)
+        + S.schedule_link_time(n, 4, bw, scheduled=True)
+    )
+    assert got == pytest.approx(want)
+
+
+def test_modeled_times_monotone_in_message_size():
+    sizes = [1e2, 1e3, 1e4, 1e5, 1e6]
+    for topology in ("switch", "ring"):
+        for impl in ("round_robin", "one_factorization", "xla"):
+            times = [
+                T.shuffle_time(8, m, T.V5E, impl, 1, topology) for m in sizes
+            ]
+            assert times == sorted(times) and times[0] < times[-1], (
+                impl, topology, times,
+            )
+    phases = [T.phase_time(m, T.V5E) for m in sizes]
+    assert phases == sorted(phases) and phases[0] < phases[-1]
+    for impl in ("xla", "pallas"):
+        packs = [T.pack_time(int(m), 16, 8, T.V5E, impl) for m in sizes]
+        assert packs == sorted(packs) and packs[0] < packs[-1]
+
+
+def test_makespan_monotone_in_rows():
+    rows = [256, 1024, 4096, 16384]
+    for pack_impl in ("xla", "pallas"):
+        ms = [
+            exchange_makespan(TableStats(r, 16), 8, pack_impl=pack_impl)
+            for r in rows
+        ]
+        assert ms == sorted(ms) and ms[0] < ms[-1]
+
+
+def test_ring_phase_loads():
+    # shift by +-1 is conflict-free; shift by k loads the ring min(k, n-k)-fold
+    sched = S.make_schedule(8, "shift")
+    assert S.schedule_ring_loads(sched) == [1, 2, 3, 4, 3, 2, 1]
+    assert [S.ring_hops(8, k) for k in range(1, 8)] == [1, 2, 3, 4, 3, 2, 1]
+    # every phase of any verified schedule moves every unit -> load >= 1
+    for kind in ("shift", "one_factorization"):
+        for load in S.schedule_ring_loads(S.make_schedule(8, kind)):
+            assert load >= 1
+
+
+# ----------------------------------------------------------------------------
+# The tuner.
+# ----------------------------------------------------------------------------
+
+def test_tune_tiny_messages_run_unchunked():
+    cfg = tune_multiplexer(_mesh8(), TableStats(rows=64, row_bytes=8))
+    assert cfg.pipeline_chunks == 1
+    assert cfg.transport_chunks == 1
+    assert cfg.modeled_s > 0
+
+
+def test_tune_large_messages_pipeline_chunked():
+    cfg = tune_multiplexer(_mesh8(), TableStats(rows=1 << 20, row_bytes=64))
+    assert cfg.pipeline_chunks > 1
+    assert cfg.impl in ("round_robin", "one_factorization")  # scheduled wins
+
+
+def test_tune_is_argmin_of_its_own_candidates():
+    cfg = tune_multiplexer(_mesh8(), TableStats(rows=1 << 16, row_bytes=16))
+    modeled = [c[-1] for c in cfg.candidates]
+    assert cfg.modeled_s == pytest.approx(min(modeled))
+    impl, pack, C, t, best = cfg.candidates[0]
+    assert (impl, pack, C, t) == (
+        cfg.impl, cfg.pack_impl, cfg.pipeline_chunks, cfg.transport_chunks
+    )
+
+
+def test_tune_respects_divisibility():
+    # 21 rows: no candidate chunking divides it -> unchunked
+    cfg = tune_multiplexer(_mesh8(), TableStats(rows=21, row_bytes=1 << 20))
+    assert cfg.pipeline_chunks == 1 and cfg.transport_chunks == 1
+    # one multiplexer serving exchanges of 4 and 6 rows: gcd=2 caps chunking
+    for _, _, C, t in candidate_configs(
+        8, [TableStats(4, 8), TableStats(6, 8)]
+    ):
+        assert C * t in (1, 2)
+
+
+def test_tune_trivial_on_single_unit_axis():
+    mesh1 = types.SimpleNamespace(axis_names=("q",), devices=np.empty((1,)))
+    cfg = tune_multiplexer(mesh1, TableStats(rows=4096, row_bytes=16))
+    assert cfg.pipeline_chunks == 1 and cfg.modeled_s == 0.0
+
+
+def test_make_multiplexer_auto_applies_tuned_knobs():
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("q",))
+    mux = make_multiplexer(
+        mesh, auto=True, table_stats=TableStats(rows=256, row_bytes=8)
+    )
+    assert mux.pipeline_chunks == 1  # single-unit axis: trivial config
+    with pytest.raises(ValueError, match="table_stats"):
+        make_multiplexer(mesh, auto=True)

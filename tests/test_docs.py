@@ -1,0 +1,27 @@
+"""Docs can't rot: every ```python block in README/ARCHITECTURE must run.
+
+Delegates to tools/check_docs.py (the same entry point the CI docs job
+uses); each block executes in its own subprocess so the Q3 quickstart can
+set up its 8 fake devices before jax initializes.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CHECKER = os.path.join(REPO, "tools", "check_docs.py")
+DOCS = ["README.md", os.path.join("docs", "ARCHITECTURE.md")]
+
+
+@pytest.mark.parametrize("doc", DOCS)
+def test_doc_snippets_execute(doc):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)  # snippets set their own fake-device flags
+    proc = subprocess.run(
+        [sys.executable, CHECKER, os.path.join(REPO, doc)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr

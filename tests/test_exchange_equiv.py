@@ -23,6 +23,7 @@ SCENARIOS = [
     "hash_shuffle_equiv",
     "consume_equiv",
     "mux_schedule_fallback",
+    "autotune_mux",
     "tpch_pack_equiv",
 ]
 

@@ -11,6 +11,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro.core import multiplexer as M
 from repro.core import schedule as S
 from repro.core.multiplexer import make_multiplexer, resolve_schedule_impl
 
@@ -31,8 +32,26 @@ def test_resolve_schedule_impl(sizes, impl, want):
 
 
 def test_resolve_schedule_impl_warns_on_fallback():
+    M._warned_odd_axis_sizes.clear()
     with pytest.warns(UserWarning, match="one_factorization"):
         resolve_schedule_impl("one_factorization", (3,))
+
+
+def test_resolve_schedule_impl_warns_once_per_axis_size():
+    """The downgrade warning fires once per distinct odd-size set, not on
+    every multiplexer build (a long-lived engine builds one per query)."""
+    M._warned_odd_axis_sizes.clear()
+    with pytest.warns(UserWarning, match="one_factorization"):
+        assert resolve_schedule_impl("one_factorization", (3,)) == "round_robin"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # an identical repeat must stay silent
+        assert resolve_schedule_impl("one_factorization", (3,)) == "round_robin"
+    with pytest.warns(UserWarning, match="one_factorization"):
+        # a different odd size is new information -> warns again
+        assert resolve_schedule_impl("one_factorization", (5,)) == "round_robin"
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert resolve_schedule_impl("one_factorization", (5,)) == "round_robin"
 
 
 def test_make_multiplexer_single_device_mesh():

@@ -1,0 +1,76 @@
+"""Execute every ```python code block in the user-facing docs.
+
+    PYTHONPATH=src python tools/check_docs.py [files...]
+
+Defaults to README.md and docs/ARCHITECTURE.md.  Each block runs in its own
+subprocess (so a block's `os.environ` setup — e.g. XLA fake devices — takes
+effect before jax initializes, and blocks cannot leak state into each
+other).  Any non-zero exit fails the run — this is what keeps the snippets
+executable instead of decorative.  Fenced blocks tagged anything other than
+``python`` (``bash``, ``text``, ...) are skipped.
+
+Run by the CI docs job and by tests/test_docs.py.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_FILES = ("README.md", os.path.join("docs", "ARCHITECTURE.md"))
+FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def python_blocks(path: str) -> list[tuple[int, str]]:
+    """(start_line, source) of every ```python fenced block in ``path``."""
+    blocks, current, lang, start = [], None, None, 0
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            m = FENCE.match(line.strip())
+            if m and current is None:
+                lang, current, start = m.group(1), [], lineno + 1
+            elif line.strip() == "```" and current is not None:
+                if lang == "python":
+                    blocks.append((start, "".join(current)))
+                current = None
+            elif current is not None:
+                current.append(line)
+    assert current is None, f"{path}: unterminated code fence"
+    return blocks
+
+
+def run_block(path: str, lineno: int, source: str, timeout: int = 600) -> bool:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", source],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=timeout,
+    )
+    label = f"{os.path.relpath(path, REPO)}:{lineno}"
+    if proc.returncode:
+        print(f"FAIL {label}\n--- stdout ---\n{proc.stdout}"
+              f"\n--- stderr ---\n{proc.stderr}")
+        return False
+    print(f"ok   {label}")
+    return True
+
+
+def main(argv: list[str]) -> int:
+    files = argv or [os.path.join(REPO, f) for f in DEFAULT_FILES]
+    failures = total = 0
+    for path in files:
+        for lineno, source in python_blocks(path):
+            total += 1
+            if not run_block(path, lineno, source):
+                failures += 1
+    print(f"{total - failures}/{total} doc blocks passed")
+    return 1 if failures or not total else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
