@@ -93,4 +93,58 @@ def axis_size(axis_name: Any) -> int:
     return int(jax.lax.psum(1, axis_name))
 
 
-__all__ = ["make_mesh", "shard_map", "set_mesh", "axis_size"]
+def enable_cpu_collectives() -> bool:
+    """Turn on cross-process CPU collectives (Gloo) where the jax supports it.
+
+    Multi-process CPU runs (``launch/cluster.py``) need a CPU collectives
+    backend — without one every cross-process psum/ppermute fails with
+    "Multiprocess computations aren't implemented on the CPU backend".  The
+    config knob is ``jax_cpu_collectives_implementation`` on 0.4.35+; older
+    jaxlibs only honor the environment variable, and some builds ship
+    without Gloo at all — so failure here is reported, not raised (the
+    caller decides whether multi-process was mandatory).  Must run before
+    the CPU backend is initialized (i.e. before any device query).
+    """
+    import os
+
+    os.environ.setdefault("JAX_CPU_COLLECTIVES_IMPLEMENTATION", "gloo")
+    try:
+        jax.config.update("jax_cpu_collectives_implementation", "gloo")
+    except (AttributeError, KeyError, ValueError):
+        return False
+    return True
+
+
+def fetch(x: Any):
+    """Concrete numpy value of an array that may span multiple processes.
+
+    Single-process (every device addressable): plain ``np.asarray``.  In a
+    multi-process run a jit output can span devices this process cannot
+    address, and 0.4.x raises on plain value fetch even for replicated
+    outputs — read the local shard when the array is fully replicated, and
+    all-gather across processes otherwise.  Pytrees are mapped leaf-wise.
+    """
+    import numpy as np
+
+    def one(leaf):
+        if not hasattr(leaf, "sharding"):  # numpy / python scalar
+            return np.asarray(leaf)
+        if leaf.is_fully_addressable:
+            return np.asarray(leaf)
+        if leaf.is_fully_replicated:
+            return np.asarray(leaf.addressable_shards[0].data)
+        from jax.experimental import multihost_utils
+
+        return np.asarray(multihost_utils.process_allgather(leaf, tiled=True))
+
+    return jax.tree.map(one, x)
+
+
+__all__ = [
+    "make_mesh",
+    "shard_map",
+    "set_mesh",
+    "axis_size",
+    "enable_cpu_collectives",
+    "fetch",
+]

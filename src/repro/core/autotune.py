@@ -60,7 +60,7 @@ import math
 import time
 from typing import Sequence
 
-from .topology import ChipSpec, V5E, pack_time, shuffle_time
+from .topology import ChipSpec, V5E, pack_time, pod_broadcast_time, shuffle_time
 
 PIPELINE_CANDIDATES = (1, 2, 4, 8)
 TRANSPORT_CANDIDATES = (1, 2, 4)
@@ -98,6 +98,13 @@ class TunedConfig:
     modeled_s: float
     measured_s: float | None = None
     candidates: tuple = ()
+    # Two-level meshes only: how the build side of a broadcast-style join
+    # crosses the pod axis — "broadcast" (replicate over DCI, the paper's
+    # broadcast join between coarse units) or "reshard" (hash-exchange it
+    # like the probe side; wins once the build side outgrows the paper's
+    # n - 1 broadcast threshold).  None on single-pod meshes.
+    cross_pod: str | None = None
+    cross_pod_modeled_s: dict | None = None
 
     def knobs(self) -> dict:
         return dict(
@@ -117,6 +124,7 @@ def exchange_makespan(
     transport_chunks: int = 1,
     chip: ChipSpec = V5E,
     topology: str = "ring",
+    num_pods: int = 1,
 ) -> float:
     """Modeled end-to-end time of one decoupled exchange (pack + shuffle).
 
@@ -124,9 +132,33 @@ def exchange_makespan(
     ``pipeline_chunks`` to divide ``stats.rows`` and ``transport_chunks`` to
     divide the per-chunk capacity — the same divisibility contract
     ``hash_shuffle`` enforces (it falls back to unchunked otherwise).
+
+    ``num_pods > 1`` prices the TWO-LEVEL exchange
+    (:func:`repro.core.exchange.hash_shuffle_two_level`): a coarse cross-pod
+    hop first — pack by destination pod, then ``num_pods - 1`` phases over
+    DCI with ~``rows / num_pods`` rows per pod message — followed by the
+    in-pod shuffle over the ``num_pods``-fold received buffer (the zero-drop
+    bound inflates the static hop-2 shapes by ``num_pods``, and the model
+    prices the shapes that actually move, not the expected occupancy).
     """
-    if n <= 1 or stats.rows == 0:
+    if n <= 1 and num_pods <= 1:
         return 0.0
+    if stats.rows == 0:
+        return 0.0
+    hop1 = 0.0
+    if num_pods > 1:
+        hop1_impl = "xla" if impl == "xla" else "round_robin"
+        pod_msg = -(-stats.rows // num_pods) * stats.row_bytes
+        hop1 = pack_time(stats.rows, stats.row_bytes, num_pods, chip, pack_impl)
+        hop1 += shuffle_time(
+            num_pods, pod_msg, chip, hop1_impl, 1, "switch", network="dci"
+        )
+        hop1 += shuffle_time(num_pods, 4, chip, hop1_impl, 1, "switch",
+                             network="dci")
+        stats = TableStats(rows=stats.rows * num_pods,
+                           row_bytes=stats.row_bytes)
+        if n <= 1:
+            return hop1
     C = pipeline_chunks
     assert stats.rows % C == 0, (stats.rows, C)
     rows_c = stats.rows // C
@@ -139,19 +171,52 @@ def exchange_makespan(
     ship_c += shuffle_time(n, 4, chip, impl, 1, topology)
     n_dma = 1 if impl == "xla" else (n - 1) * transport_chunks
     overlap_frac = 0.0 if (C == 1 or n_dma <= 1) else 1.0 - 1.0 / n_dma
-    return C * (pack_c + ship_c) - (C - 1) * overlap_frac * min(pack_c, ship_c)
+    inner = C * (pack_c + ship_c) - (C - 1) * overlap_frac * min(pack_c, ship_c)
+    return hop1 + inner
 
 
-def _shuffle_axis(mesh) -> tuple[str | None, int]:
-    """The mesh's shuffle axis: the largest small-network (non-pod) axis."""
+def pod_strategy_times(
+    build: TableStats,
+    n: int,
+    num_pods: int,
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+) -> dict:
+    """Modeled cost of each way to deliver a join's build side on a pod mesh.
+
+    * ``"broadcast"`` — replicate: ring all-gather in-pod (ICI), then ship
+      each pod's aggregated ``n x local`` bytes to every other pod over DCI.
+      DCI bytes scale with ``num_pods * n`` — the classic-exchange blow-up —
+      but there is no pack and no second shuffle, so tiny build sides win
+      (the paper's ``n - 1`` broadcast-join threshold).
+    * ``"reshard"`` — treat the build side like the probe side: a two-level
+      hash exchange.  DCI carries each byte once; pays pack + in-pod shuffle.
+    """
+    local_bytes = build.rows * build.row_bytes
+    in_pod_gather = (n - 1) * local_bytes / chip.ici_link_bandwidth + (
+        max(n - 1, 0)
+    ) * chip.ici_launch_latency
+    broadcast = in_pod_gather + pod_broadcast_time(
+        num_pods, n * local_bytes, chip
+    )
+    reshard = exchange_makespan(
+        build, n, chip=chip, topology=topology, num_pods=num_pods
+    )
+    return {"broadcast": broadcast, "reshard": reshard}
+
+
+def _shuffle_axis(mesh) -> tuple[str | None, int, int]:
+    """The mesh's shuffle axis (largest small-network axis) and pod count."""
     from .hybrid import plan_for_mesh
 
     plan = plan_for_mesh(tuple(mesh.axis_names), tuple(mesh.devices.shape))
-    best, size = None, 1
+    best, size, pods = None, 1, 1
     for ax, s in zip(mesh.axis_names, mesh.devices.shape):
-        if ax not in plan.large_axes and s > size:
+        if ax in plan.large_axes:
+            pods *= int(s)
+        elif s > size:
             best, size = ax, s
-    return best, size
+    return best, size, pods
 
 
 def candidate_configs(
@@ -193,6 +258,7 @@ def tune_multiplexer(
     axis: str | None = None,
     refine: bool = False,
     refine_top_k: int = 3,
+    broadcast_stats: TableStats | None = None,
 ) -> TunedConfig:
     """Choose the multiplexer knobs that minimize the modeled shuffle makespan.
 
@@ -203,6 +269,13 @@ def tune_multiplexer(
     axis.  With ``refine=True`` the ``refine_top_k`` best modeled candidates
     are micro-benchmarked on the live mesh and the measured winner is
     returned (``measured_s`` filled in).
+
+    On a two-level mesh (a ``pod`` axis in the hybrid plan) every exchange
+    is priced as the two-level shuffle — coarse DCI hop plus the
+    ``num_pods``-fold in-pod hop — and, when ``broadcast_stats`` describes a
+    broadcast-style join's build side, the cheaper of cross-pod
+    ``"broadcast"`` and ``"reshard"`` is recorded in
+    :attr:`TunedConfig.cross_pod` (see :func:`pod_strategy_times`).
     """
     stats = (
         (table_stats,)
@@ -210,16 +283,28 @@ def tune_multiplexer(
         else tuple(table_stats)
     )
     if axis is None:
-        axis, n = _shuffle_axis(mesh)
+        axis, n, num_pods = _shuffle_axis(mesh)
     else:
         n = int(mesh.devices.shape[list(mesh.axis_names).index(axis)])
+        num_pods = _shuffle_axis(mesh)[2]
+    cross_pod = cross_pod_times = None
+    if num_pods > 1 and broadcast_stats is not None:
+        cross_pod_times = pod_strategy_times(
+            broadcast_stats, n, num_pods, chip, topology
+        )
+        cross_pod = min(cross_pod_times, key=cross_pod_times.get)
     if axis is None or n <= 1 or not stats or all(s.rows == 0 for s in stats):
-        return TunedConfig("round_robin", "xla", 1, 1, 0.0)
+        return TunedConfig(
+            "round_robin", "xla", 1, 1, 0.0,
+            cross_pod=cross_pod, cross_pod_modeled_s=cross_pod_times,
+        )
 
     scored = []
     for impl, pack_impl, C, t in candidate_configs(n, stats):
         total = sum(
-            exchange_makespan(s, n, impl, pack_impl, C, t, chip, topology)
+            exchange_makespan(
+                s, n, impl, pack_impl, C, t, chip, topology, num_pods
+            )
             for s in stats
         )
         scored.append((total, C, t, impl, pack_impl))
@@ -230,6 +315,20 @@ def tune_multiplexer(
     )
     best = scored[0]
     measured = None
+    if refine and num_pods > 1:
+        # measure_shuffle_config runs the single-level in-pod shuffle; on a
+        # two-level mesh that measures neither the DCI hop nor the P-fold
+        # hop-2 shapes the model prices, so a "measured winner" would be
+        # ranked on the wrong experiment.  Stay analytical rather than
+        # return a measured_s that is not comparable to modeled_s.
+        import warnings
+
+        warnings.warn(
+            "tune_multiplexer(refine=True) is not supported on two-level "
+            "meshes yet; returning the analytical winner",
+            stacklevel=2,
+        )
+        refine = False
     if refine and len(scored) > 1:
         probe = max(stats, key=lambda s: s.rows * s.row_bytes)
         timed = []
@@ -250,6 +349,8 @@ def tune_multiplexer(
         modeled_s=total,
         measured_s=measured,
         candidates=candidates,
+        cross_pod=cross_pod,
+        cross_pod_modeled_s=cross_pod_times,
     )
 
 
@@ -418,6 +519,7 @@ __all__ = [
     "TableStats",
     "TunedConfig",
     "exchange_makespan",
+    "pod_strategy_times",
     "candidate_configs",
     "tune_multiplexer",
     "measure_shuffle_config",

@@ -346,6 +346,27 @@ def _scatter_pack(
     return buffers, counts, dropped
 
 
+def _rank_by_destination(
+    dest: jax.Array, num_dest: int, impl: PackImpl
+) -> tuple[jax.Array, jax.Array]:
+    """Arrival-order rank within each destination bin + per-bin totals.
+
+    ``dest`` must already have invalid rows masked to the overflow bin
+    ``num_dest``.  Shared by :func:`pack_by_destination` and the two-level
+    shuffle (which packs several arrays with one rank computation).
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.partition_ranks(dest, num_dest + 1)
+    if impl == "xla":
+        onehot = jax.nn.one_hot(dest, num_dest + 1, dtype=jnp.int32)
+        rank = jnp.cumsum(onehot, axis=0) - onehot  # rank within destination
+        my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
+        return my_rank, onehot.sum(axis=0)
+    raise ValueError(f"unknown pack impl {impl!r}")
+
+
 def pack_by_destination(
     dest: jax.Array,
     rows: jax.Array,
@@ -371,17 +392,7 @@ def pack_by_destination(
     if valid is None:
         valid = jnp.ones((nrows,), jnp.bool_)
     dest = jnp.where(valid, dest, num_dest)  # invalid rows -> overflow bucket
-    if impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-
-        my_rank, counts_all = kernel_ops.partition_ranks(dest, num_dest + 1)
-    elif impl == "xla":
-        onehot = jax.nn.one_hot(dest, num_dest + 1, dtype=jnp.int32)
-        rank = jnp.cumsum(onehot, axis=0) - onehot  # rank within destination
-        my_rank = jnp.take_along_axis(rank, dest[:, None], axis=1)[:, 0]
-        counts_all = onehot.sum(axis=0)
-    else:
-        raise ValueError(f"unknown pack impl {impl!r}")
+    my_rank, counts_all = _rank_by_destination(dest, num_dest, impl)
     return _scatter_pack(dest, my_rank, counts_all, rows, num_dest, capacity, valid)
 
 
@@ -481,6 +492,123 @@ def hash_shuffle(
     return rows_out, valid_out, lax.psum(dropped, axis_name)
 
 
+# ----------------------------------------------------------------------------
+# Two-level exchange: coarse cross-pod hop + fine in-pod shuffle (paper §3.1).
+# ----------------------------------------------------------------------------
+
+def hash_shuffle_two_level(
+    keys: jax.Array,
+    rows: jax.Array,
+    inner_axis: str,
+    outer_axis: str,
+    capacity: int,
+    impl: AllToAllImpl = "round_robin",
+    valid: jax.Array | None = None,
+    pack_impl: PackImpl = "xla",
+    num_chunks: int = 1,
+    transport_chunks: int = 1,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Globally repartition by key hash over a two-level (pod x inner) mesh.
+
+    The paper's hybrid-parallelism rule says fine-grained shuffles must never
+    cross the network in the large — but a join still needs rows with equal
+    keys co-located *globally*.  The resolution (§3.1/§3.2.2) is granularity:
+    the slow network carries one COARSE message per remote server pair
+    (multiplexer-to-multiplexer), while fine-grained partitioning stays on
+    the fast network.  This is that exchange, as two hops:
+
+    1. **cross-pod, coarse** — rows are packed by *destination pod*
+       (``hash(key) % (P * n) // n``) and shipped over ``outer_axis`` with
+       one message per peer pod.  Per device that is ``P - 1`` messages of
+       up to the full local row count — pod granularity, so the cross-DCI
+       connection count is ``N * (P - 1)`` instead of the classic
+       ``N * (N - 1)`` (the paper's ``n^2`` vs ``n^2 t^2`` argument).
+    2. **in-pod, fine** — a normal :func:`hash_shuffle` over ``inner_axis``
+       delivers each row to the in-pod device owning ``hash(key) % n``
+       (because ``n`` divides ``P * n``, the in-pod owner is independent of
+       which pod computed it).
+
+    The destination device for every row is exactly the one a flat
+    ``hash % N`` shuffle over the joint axis would pick (mesh device order
+    puts pod ``p``'s devices at indices ``p*n .. p*n + n - 1``), so results
+    match the single-level exchange up to arrival order.
+
+    ``capacity`` has flat-shuffle semantics: the per-(src, dst) message
+    bound of the equivalent *global* exchange.  The output is
+    ``[n * P * capacity]`` rows per device — the same total as a flat
+    ``N``-unit shuffle with that capacity.  Hop 1 is structurally zero-drop
+    (its per-pod message capacity is the full local row count); hop 2
+    inherits the caller's bound scaled by ``P``.  ``num_chunks`` /
+    ``transport_chunks`` pipeline the in-pod hop (the coarse hop is a single
+    phase sequence and ships unchunked).  The returned ``dropped`` is
+    psummed over BOTH axes — a global count.
+    """
+    P = _axis_size(outer_axis)
+    if P == 1:
+        out_rows, out_valid, dropped = hash_shuffle(
+            keys, rows, inner_axis, capacity, impl=impl, valid=valid,
+            pack_impl=pack_impl, num_chunks=num_chunks,
+            transport_chunks=transport_chunks,
+        )
+        return out_rows, out_valid, lax.psum(dropped, outer_axis)
+    n = _axis_size(inner_axis)
+    N = P * n
+    T = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((T,), jnp.bool_)
+
+    # Hop 1: pack by destination pod, one rank computation for keys + rows.
+    gdest = (fibonacci_hash(keys) % jnp.uint32(N)).astype(jnp.int32)
+    dest_pod = jnp.where(valid, gdest // n, P)  # invalid -> overflow bucket
+    my_rank, counts_all = _rank_by_destination(dest_pod, P, pack_impl)
+    # Coarse shift phases over the pod axis (the multiplexer connections of
+    # the paper): scheduled transports use the shift schedule — valid for
+    # every P, unlike one_factorization — and "xla" keeps the monolithic
+    # all-to-all for the baseline configuration.
+    hop1 = "xla" if impl == "xla" else "round_robin"
+    if rows.ndim == 2 and rows.dtype == keys.dtype:
+        # Ship keys as an extra leading column of the row matrix: one phase
+        # sequence over the slowest network instead of two.  (This is the
+        # relational hot path — int32 keys, packed int32 rows.)
+        aug = jnp.concatenate([keys[:, None], rows], axis=1)
+        aug_bufs, counts, drop1 = _scatter_pack(
+            dest_pod, my_rank, counts_all, aug, P, T, valid
+        )
+        aug_in = all_to_all(aug_bufs, outer_axis, impl=hop1)
+        keys_in, rows_in = aug_in[:, :, 0], aug_in[:, :, 1:]
+    else:
+        key_bufs, counts, drop1 = _scatter_pack(
+            dest_pod, my_rank, counts_all, keys, P, T, valid
+        )
+        row_bufs, _, _ = _scatter_pack(
+            dest_pod, my_rank, counts_all, rows, P, T, valid
+        )
+        keys_in = all_to_all(key_bufs, outer_axis, impl=hop1)
+        rows_in = all_to_all(row_bufs, outer_axis, impl=hop1)
+    counts_in = all_to_all(counts.reshape(P, 1), outer_axis, impl=hop1)
+    valid_in = (
+        jnp.arange(T)[None, :] < counts_in.reshape(P)[:, None]
+    ).reshape(P * T)
+
+    # Hop 2: ordinary in-pod shuffle.  n | N makes hash % n the correct
+    # in-pod owner for rows from any source pod.
+    out_rows, out_valid, drop2 = hash_shuffle(
+        keys_in.reshape(P * T),
+        rows_in.reshape((P * T,) + rows_in.shape[2:]),
+        inner_axis,
+        capacity * P,
+        impl=impl,
+        valid=valid_in,
+        pack_impl=pack_impl,
+        num_chunks=num_chunks,
+        transport_chunks=transport_chunks,
+    )
+    # drop2 is already psummed over the inner axis; lift both to global.
+    dropped = lax.psum(lax.psum(drop1, inner_axis), outer_axis)
+    dropped = dropped + lax.psum(drop2, outer_axis)
+    return out_rows, out_valid, dropped
+
+
 __all__ = [
     "AllToAllImpl",
     "PackImpl",
@@ -496,4 +624,5 @@ __all__ = [
     "fibonacci_hash",
     "pack_by_destination",
     "hash_shuffle",
+    "hash_shuffle_two_level",
 ]

@@ -101,12 +101,31 @@ class HybridPlan:
     exchange: ExchangeStrategy
     cluster: ClusterSpec
 
+    @property
+    def pod_axis(self) -> str | None:
+        """The mesh axis crossing the slow network, if any."""
+        return self.large_axes[0] if self.large_axes else None
+
+    @property
+    def num_pods(self) -> int:
+        return self.cluster.num_pods
+
     def validate_axis_for_alltoall(self, axis: str) -> None:
+        """Fine-grained shuffles must never cross the network in the large.
+
+        Cross-pod traffic is only legal at coarse granularity — one message
+        per pod pair (the two-level exchange's first hop, hierarchical
+        gradient sync, broadcast of small build sides).  Routing a
+        per-destination-device shuffle over a ``large_axes`` member would
+        re-create the classic exchange's ``n^2 t^2`` connection blow-up on
+        the slowest network, so it is rejected at plan level.
+        """
         if axis in self.large_axes:
             raise ValueError(
                 f"all-to-all over large-network axis {axis!r}: the hybrid plan "
                 "forbids fine-grained shuffles across the slow network "
-                "(paper §3.2: exchanges run between coarse units only)"
+                "(paper §3.2: exchanges run between coarse units only; use "
+                "the two-level hash_shuffle_global for a global repartition)"
             )
 
 

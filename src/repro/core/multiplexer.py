@@ -80,6 +80,10 @@ class CommMultiplexer:
     pack_impl: exchange.PackImpl = "xla"
     pipeline_chunks: int = 1
     transport_chunks: int = 1
+    # Two-level meshes: how broadcast-style build sides cross the pod axis
+    # ("broadcast" replicates over DCI, "reshard" hash-exchanges them like
+    # the probe side).  Set by the autotuner; ignored on single-pod meshes.
+    cross_pod: str = "broadcast"
 
     # -- exchange-operator entry points (must be inside shard_map) ---------
 
@@ -118,6 +122,27 @@ class CommMultiplexer:
             x, axis_name, consume, init, schedule=sched
         )
 
+    def _resolve_chunks(self, rows: int, capacity: int) -> tuple[int, int]:
+        """Chunk knobs that actually divide this shuffle's shapes, warning
+        and falling back (unchunked / whole messages) where they do not."""
+        chunks = self.pipeline_chunks
+        if chunks > 1 and (rows % chunks or capacity % chunks):
+            warnings.warn(
+                f"pipeline_chunks={chunks} does not divide rows={rows} / "
+                f"capacity={capacity}; running this shuffle unchunked",
+                stacklevel=3,
+            )
+            chunks = 1
+        transport = self.transport_chunks
+        if transport > 1 and (capacity // chunks) % transport:
+            warnings.warn(
+                f"transport_chunks={transport} does not divide per-chunk "
+                f"capacity {capacity // chunks}; shipping whole messages",
+                stacklevel=3,
+            )
+            transport = 1
+        return chunks, transport
+
     def hash_shuffle(
         self,
         keys: jax.Array,
@@ -127,23 +152,7 @@ class CommMultiplexer:
         valid: jax.Array | None = None,
     ):
         self.plan.validate_axis_for_alltoall(axis_name)
-        chunks = self.pipeline_chunks
-        T = keys.shape[0]
-        if chunks > 1 and (T % chunks or capacity % chunks):
-            warnings.warn(
-                f"pipeline_chunks={chunks} does not divide rows={T} / "
-                f"capacity={capacity}; running this shuffle unchunked",
-                stacklevel=2,
-            )
-            chunks = 1
-        transport = self.transport_chunks
-        if transport > 1 and (capacity // chunks) % transport:
-            warnings.warn(
-                f"transport_chunks={transport} does not divide per-chunk "
-                f"capacity {capacity // chunks}; shipping whole messages",
-                stacklevel=2,
-            )
-            transport = 1
+        chunks, transport = self._resolve_chunks(keys.shape[0], capacity)
         return exchange.hash_shuffle(
             keys, rows, axis_name, capacity, impl=self.impl, valid=valid,
             pack_impl=self.pack_impl, num_chunks=chunks,
@@ -153,6 +162,55 @@ class CommMultiplexer:
     def broadcast(self, x: jax.Array, axis_name: str) -> jax.Array:
         impl = "xla" if self.impl == "xla" else "ring"
         return exchange.broadcast_exchange(x, axis_name, impl=impl)
+
+    # -- global (two-level) exchange entry points ---------------------------
+
+    def hash_shuffle_global(
+        self,
+        keys: jax.Array,
+        rows: jax.Array,
+        axis_name: str,
+        capacity: int,
+        valid: jax.Array | None = None,
+    ):
+        """Repartition by key hash over the WHOLE mesh, pod axis included.
+
+        On a single-level mesh this is exactly :meth:`hash_shuffle`.  On a
+        two-level mesh it runs the sanctioned coarse route
+        (:func:`repro.core.exchange.hash_shuffle_two_level`): one message
+        per peer pod over the slow network, then the fine in-pod shuffle
+        over ``axis_name`` — the multiplexer-granularity exchange of paper
+        §3.2.2.  The plan still rejects ``axis_name`` being the pod axis
+        itself (that would be a fine-grained DCI shuffle).
+        """
+        pod = self.plan.pod_axis
+        if pod is None:
+            return self.hash_shuffle(keys, rows, axis_name, capacity, valid)
+        self.plan.validate_axis_for_alltoall(axis_name)
+        chunks, transport = self._resolve_chunks(
+            keys.shape[0] * self.plan.num_pods, capacity * self.plan.num_pods
+        )
+        return exchange.hash_shuffle_two_level(
+            keys, rows, axis_name, pod, capacity, impl=self.impl,
+            valid=valid, pack_impl=self.pack_impl, num_chunks=chunks,
+            transport_chunks=transport,
+        )
+
+    def broadcast_global(self, x: jax.Array, axis_name: str) -> jax.Array:
+        """Every device ends with every device's chunk, pods included.
+
+        In-pod ring all-gather first (fast network), then one coarse
+        all-gather of the pod-aggregated block over the pod axis — each byte
+        crosses DCI once per remote pod, at pod granularity.  Result leading
+        dims are ``[num_pods, n]`` on a two-level mesh, ``[n]`` otherwise
+        (callers flatten; every device holds an identical copy either way).
+        """
+        y = self.broadcast(x, axis_name)
+        pod = self.plan.pod_axis
+        if pod is None:
+            return y
+        impl = "xla" if self.impl == "xla" else "ring"
+        return exchange.broadcast_exchange(y, pod, impl=impl)
 
     # -- gradient sync (hybrid two-level vs flat) ---------------------------
 
@@ -216,6 +274,8 @@ def make_multiplexer(
     chip: ChipSpec = V5E,
     topology: str = "ring",
     refine: bool = False,
+    broadcast_stats=None,
+    cross_pod: str = "broadcast",
 ) -> CommMultiplexer:
     """Build the multiplexer for a mesh; verifies the schedule once (cheap).
 
@@ -226,11 +286,14 @@ def make_multiplexer(
     letting an invalid config reach the runtime.
 
     With ``auto=True`` (or ``impl="auto"``) every knob — transport,
-    ``pack_impl``, ``pipeline_chunks``, ``transport_chunks`` — is derived
+    ``pack_impl``, ``pipeline_chunks``, ``transport_chunks``, and on
+    two-level meshes the ``cross_pod`` build-side strategy — is derived
     from the :mod:`repro.core.topology` cost model by
     :func:`repro.core.autotune.tune_multiplexer` instead of taken from the
     arguments.  ``table_stats`` (one :class:`repro.core.autotune.TableStats`
-    per exchange the multiplexer will carry) is required; ``chip`` /
+    per exchange the multiplexer will carry) is required;
+    ``broadcast_stats`` optionally describes a broadcast-style join's build
+    side so the tuner can price cross-pod broadcast vs reshard; ``chip`` /
     ``topology`` select the hardware model and ``refine=True`` additionally
     micro-benchmarks the best modeled candidates on the live mesh.
     """
@@ -243,12 +306,15 @@ def make_multiplexer(
                 "rows/row_bytes of the exchanges this multiplexer will carry"
             )
         tuned = tune_multiplexer(
-            mesh, table_stats, chip=chip, topology=topology, refine=refine
+            mesh, table_stats, chip=chip, topology=topology, refine=refine,
+            broadcast_stats=broadcast_stats,
         )
         impl = tuned.impl
         pack_impl = tuned.pack_impl
         pipeline_chunks = tuned.pipeline_chunks
         transport_chunks = tuned.transport_chunks
+        if tuned.cross_pod is not None:
+            cross_pod = tuned.cross_pod
     plan = plan_for_mesh(
         tuple(mesh.axis_names), tuple(mesh.devices.shape), exchange=(
             "xla" if impl == "xla" else "round_robin"
@@ -265,12 +331,15 @@ def make_multiplexer(
         for size in small_sizes:
             if size > 1:
                 verify_schedule(make_schedule(size, kind))
+    if cross_pod not in ("broadcast", "reshard"):
+        raise ValueError(f"unknown cross_pod strategy {cross_pod!r}")
     return CommMultiplexer(
         plan=plan,
         impl=impl,
         pack_impl=pack_impl,
         pipeline_chunks=pipeline_chunks,
         transport_chunks=transport_chunks,
+        cross_pod=cross_pod,
     )
 
 

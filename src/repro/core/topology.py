@@ -41,7 +41,24 @@ class ChipSpec:
     hbm_bytes: int = 16 * 2**30
     vmem_bytes: int = 128 * 2**20
     ici_launch_latency: float = 2e-6  # s per issued ppermute phase
+    dci_launch_latency: float = 10e-6  # s per cross-pod phase (DCN RTT-ish)
     kernel_launch_latency: float = 1e-6  # s per pack-kernel dispatch
+
+    def link_bandwidth(self, network: str = "ici") -> float:
+        """Per-unit link bandwidth of one network level ('ici' or 'dci')."""
+        if network == "ici":
+            return self.ici_link_bandwidth
+        if network == "dci":
+            return self.dci_bandwidth
+        raise ValueError(f"unknown network level {network!r}")
+
+    def launch_latency(self, network: str = "ici") -> float:
+        """Per-phase collective launch latency of one network level."""
+        if network == "ici":
+            return self.ici_launch_latency
+        if network == "dci":
+            return self.dci_launch_latency
+        raise ValueError(f"unknown network level {network!r}")
 
 
 V5E = ChipSpec()
@@ -258,6 +275,7 @@ def phase_time(
     chip: ChipSpec = V5E,
     transport_chunks: int = 1,
     link_load: int = 1,
+    network: str = "ici",
 ) -> float:
     """One scheduled shuffle phase: launch latency per sub-message + wire time.
 
@@ -266,9 +284,12 @@ def phase_time(
     ``link_load`` is the number of messages sharing the phase's busiest link
     (1 on a non-blocking switch; :func:`repro.core.schedule.ring_phase_load`
     on a torus ring), which stretches the wire time proportionally.
+    ``network`` selects the level the phase crosses: ``"ici"`` (in-pod, the
+    network in the small) or ``"dci"`` (cross-pod, the network in the large
+    — lower bandwidth, higher per-phase latency).
     """
-    wire = link_load * message_bytes / chip.ici_link_bandwidth
-    return transport_chunks * chip.ici_launch_latency + wire
+    wire = link_load * message_bytes / chip.link_bandwidth(network)
+    return transport_chunks * chip.launch_latency(network) + wire
 
 
 def shuffle_time(
@@ -278,6 +299,7 @@ def shuffle_time(
     impl: str = "round_robin",
     transport_chunks: int = 1,
     topology: str = "switch",
+    network: str = "ici",
 ) -> float:
     """Modeled all-to-all time: ``message_bytes`` from each unit to each peer.
 
@@ -297,6 +319,11 @@ def shuffle_time(
       bound as the shift schedule with a single launch — its real cost
       relative to the scheduled impls is that one monolithic DMA cannot be
       pipelined against pack compute (see the autotuner's overlap term).
+
+    ``network`` prices the same shuffle over the other network level: the
+    cross-pod hop of a two-level exchange is a ``num_pods``-unit all-to-all
+    over ``"dci"`` (a switched optical fabric — ``topology="switch"`` is the
+    natural pairing; there is no DCI ring to share links on).
     """
     from .schedule import make_schedule, schedule_ring_loads
 
@@ -305,10 +332,10 @@ def shuffle_time(
     if impl == "xla":
         if topology == "ring":
             loads = schedule_ring_loads(make_schedule(n, "shift"))
-            wire = sum(loads) * message_bytes / chip.ici_link_bandwidth
-            return chip.ici_launch_latency + wire
-        wire = (n - 1) * message_bytes / chip.ici_link_bandwidth
-        return chip.ici_launch_latency + wire / contention_factor(n)
+            wire = sum(loads) * message_bytes / chip.link_bandwidth(network)
+            return chip.launch_latency(network) + wire
+        wire = (n - 1) * message_bytes / chip.link_bandwidth(network)
+        return chip.launch_latency(network) + wire / contention_factor(n)
     kind = "shift" if impl == "round_robin" else impl
     sched = make_schedule(n, kind)
     if topology == "ring":
@@ -318,8 +345,24 @@ def shuffle_time(
     else:
         raise ValueError(f"unknown topology {topology!r}")
     return sum(
-        phase_time(message_bytes, chip, transport_chunks, load) for load in loads
+        phase_time(message_bytes, chip, transport_chunks, load, network)
+        for load in loads
     )
+
+
+def pod_broadcast_time(
+    num_pods: int,
+    pod_bytes: float,
+    chip: ChipSpec = V5E,
+) -> float:
+    """Cross-pod broadcast: ship one pod's aggregate ``pod_bytes`` to every
+    other pod over DCI (ring all-gather: ``num_pods - 1`` phases).  The
+    paper's broadcast-join cost under hybrid parallelism — each byte is sent
+    once per remote *server*, not once per remote thread.
+    """
+    if num_pods <= 1 or pod_bytes <= 0:
+        return 0.0
+    return (num_pods - 1) * phase_time(pod_bytes, chip, network="dci")
 
 
 def sync_amortization(
@@ -348,5 +391,6 @@ __all__ = [
     "pack_time",
     "phase_time",
     "shuffle_time",
+    "pod_broadcast_time",
     "sync_amortization",
 ]

@@ -1,0 +1,241 @@
+"""Multi-process cluster bring-up: a REAL network-in-the-large for CI.
+
+Every mesh this repo ran before this module existed was single-host fake
+devices — the ``pod`` axis, ``hierarchical_psum`` and the
+exchange-forbidden-on-DCI rule had never crossed an actual process
+boundary.  This module closes that gap two ways:
+
+* :func:`init_cluster` — the worker half.  Call it at the top of a script
+  (before anything touches jax devices); it reads the ``REPRO_CLUSTER_*``
+  environment (or explicit arguments), forces the requested number of fake
+  CPU devices *before* the backend initializes, enables the Gloo CPU
+  collectives backend, and runs ``jax.distributed.initialize``.  After it
+  returns, ``jax.process_count() == N`` and every collective over a mesh
+  that spans processes really crosses a socket — the CI stand-in for DCI.
+
+* :func:`run_local_cluster` — the launcher half.  Spawns N copies of a
+  worker script as OS processes on this host (coordinator on a free
+  localhost port), streams each worker's output to a spool file, enforces a
+  deadline, and raises with the offending worker's output on any failure.
+
+Command line (the recipe ``docs/MULTIHOST.md`` walks through)::
+
+    python -m repro.launch.cluster --processes 2 --local-devices 4 \
+        tests/_multiproc_driver.py hierarchical_psum
+
+On real hardware none of the fakery is needed: ``jax.distributed
+.initialize()`` with no arguments picks up the TPU/GPU cluster environment,
+and ``init_cluster()`` degrades to exactly that call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+ENV_COORDINATOR = "REPRO_CLUSTER_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_CLUSTER_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_CLUSTER_PROCESS_ID"
+ENV_LOCAL_DEVICES = "REPRO_CLUSTER_LOCAL_DEVICES"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterInfo:
+    """What :func:`init_cluster` established."""
+
+    process_id: int
+    num_processes: int
+    coordinator: str | None
+    local_devices: int
+
+
+def _fake_device_flag(count: int) -> None:
+    flag = f"--xla_force_host_platform_device_count={count}"
+    existing = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in existing:
+        os.environ["XLA_FLAGS"] = (existing + " " + flag).strip()
+
+
+def init_cluster(
+    *,
+    coordinator: str | None = None,
+    num_processes: int | None = None,
+    process_id: int | None = None,
+    local_devices: int | None = None,
+    timeout_s: int = 120,
+) -> ClusterInfo:
+    """Join (or degenerate to) a jax.distributed cluster.  Call FIRST.
+
+    Arguments default to the ``REPRO_CLUSTER_*`` environment set by
+    :func:`run_local_cluster`; outside a launched cluster (all unset) this
+    is a no-op returning a single-process :class:`ClusterInfo`, so worker
+    scripts also run standalone.  Must run before jax initializes its
+    backends — the fake-device flag and the Gloo collectives selection are
+    both latched at backend init.
+    """
+    coordinator = coordinator or os.environ.get(ENV_COORDINATOR)
+    if num_processes is None:
+        num_processes = int(os.environ.get(ENV_NUM_PROCESSES, "1"))
+    if process_id is None:
+        process_id = int(os.environ.get(ENV_PROCESS_ID, "0"))
+    if local_devices is None:
+        local_devices = int(os.environ.get(ENV_LOCAL_DEVICES, "0"))
+
+    if local_devices:
+        _fake_device_flag(local_devices)
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+    from repro.compat import enable_cpu_collectives
+
+    if num_processes > 1:
+        if os.environ.get("JAX_PLATFORMS", "") in ("", "cpu"):
+            enable_cpu_collectives()
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=coordinator,
+            num_processes=num_processes,
+            process_id=process_id,
+            initialization_timeout=timeout_s,
+        )
+    return ClusterInfo(
+        process_id=process_id,
+        num_processes=num_processes,
+        coordinator=coordinator,
+        local_devices=local_devices,
+    )
+
+
+def _free_port() -> int:
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+
+
+def run_local_cluster(
+    argv: list[str],
+    num_processes: int = 2,
+    local_devices: int = 4,
+    timeout_s: int = 600,
+    env: dict | None = None,
+    echo: bool = True,
+) -> list[str]:
+    """Spawn ``argv`` as ``num_processes`` coordinated worker processes.
+
+    Each worker gets the ``REPRO_CLUSTER_*`` environment (:func:`init_cluster`
+    reads it), ``JAX_PLATFORMS=cpu``, and a scrubbed ``XLA_FLAGS`` so the
+    fake-device count is exactly ``local_devices``.  Output is spooled to
+    files (not pipes — a full pipe would deadlock workers that are blocked
+    in a collective with a chatty peer).  Returns each worker's combined
+    stdout+stderr, process id order; raises ``RuntimeError`` with the full
+    logs if any worker exits nonzero or the deadline passes.
+    """
+    port = _free_port()
+    procs, logs = [], []
+    for pid in range(num_processes):
+        e = dict(os.environ)
+        e.pop("XLA_FLAGS", None)
+        e.update(env or {})
+        e.update({
+            ENV_COORDINATOR: f"127.0.0.1:{port}",
+            ENV_NUM_PROCESSES: str(num_processes),
+            ENV_PROCESS_ID: str(pid),
+            ENV_LOCAL_DEVICES: str(local_devices),
+            "JAX_PLATFORMS": "cpu",
+        })
+        log = tempfile.NamedTemporaryFile(
+            mode="w+", suffix=f".proc{pid}.log", delete=False
+        )
+        logs.append(log)
+        procs.append(subprocess.Popen(
+            [sys.executable, *argv],
+            env=e, stdout=log, stderr=subprocess.STDOUT, text=True,
+        ))
+    deadline = time.monotonic() + timeout_s
+    try:
+        for p in procs:
+            p.wait(timeout=max(1.0, deadline - time.monotonic()))
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        for p in procs:
+            p.wait()
+        raise RuntimeError(
+            f"cluster run timed out after {timeout_s}s\n"
+            + _format_logs(argv, procs, logs)
+        ) from None
+    outputs = []
+    for log in logs:
+        log.flush()
+        log.seek(0)
+        outputs.append(log.read())
+        log.close()
+        os.unlink(log.name)
+    if echo:
+        for pid, out in enumerate(outputs):
+            for line in out.splitlines():
+                print(f"[proc {pid}] {line}")
+    bad = [p.returncode for p in procs if p.returncode]
+    if bad:
+        raise RuntimeError(
+            f"cluster run failed (exit codes "
+            f"{[p.returncode for p in procs]})\n"
+            + "\n".join(
+                f"--- proc {pid} ---\n{out}" for pid, out in enumerate(outputs)
+            )
+        )
+    return outputs
+
+
+def _format_logs(argv, procs, logs) -> str:
+    parts = [f"argv: {argv}"]
+    for pid, log in enumerate(logs):
+        try:
+            log.flush()
+            log.seek(0)
+            parts.append(f"--- proc {pid} (exit {procs[pid].returncode}) ---")
+            parts.append(log.read())
+            log.close()
+            os.unlink(log.name)
+        except OSError:
+            pass
+    return "\n".join(parts)
+
+
+def main(argv: list[str]) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.cluster",
+        description="Run a worker script as a local multi-process jax cluster "
+        "(N CPU processes x M fake devices each).",
+    )
+    ap.add_argument("--processes", type=int, default=2)
+    ap.add_argument("--local-devices", type=int, default=4)
+    ap.add_argument("--timeout", type=int, default=600)
+    ap.add_argument("worker", nargs=argparse.REMAINDER,
+                    help="worker script and its arguments")
+    args = ap.parse_args(argv)
+    worker = [a for a in args.worker if a != "--"]
+    if not worker:
+        ap.error("missing worker script")
+    try:
+        run_local_cluster(
+            worker, num_processes=args.processes,
+            local_devices=args.local_devices, timeout_s=args.timeout,
+        )
+    except RuntimeError as e:
+        print(str(e), file=sys.stderr)
+        return 1
+    return 0
+
+
+__all__ = ["ClusterInfo", "init_cluster", "run_local_cluster"]
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

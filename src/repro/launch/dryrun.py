@@ -129,7 +129,18 @@ def run_cell(
         return art
 
     exchange_axis = "data" if cfg.exchange_over_data else "model"
-    ctx = make_context(multi_pod=multi_pod, exchange_impl=cfg.exchange_impl)
+    # dryrun models the paper's fixed 256-chip pod on 512 fake devices in
+    # one process, so the mesh is pinned here — (2,16,16) / (16,16), the
+    # shapes the artifact labels above promise — rather than derived from
+    # the host topology (a real multi-host launch uses jax.process_count()
+    # via make_production_mesh instead).
+    from repro.compat import make_mesh as _compat_make_mesh
+
+    mesh = _compat_make_mesh(
+        (2, 16, 16) if multi_pod else (16, 16),
+        ("pod", "data", "model") if multi_pod else ("data", "model"),
+    )
+    ctx = make_context(mesh=mesh, exchange_impl=cfg.exchange_impl)
     rules = ctx.rules
     if cfg.exchange_over_data:
         # the paper's topology: shuffle between coarse (data) units, keep

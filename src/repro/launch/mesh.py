@@ -19,25 +19,103 @@ from repro.compat import make_mesh as _make_mesh
 from repro.distributed.sharding import AxisRules, MeshContext, default_rules
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return _make_mesh(shape, axes)
+def _squarest_factors(n: int) -> tuple[int, int]:
+    """``(d, m)`` with ``d * m == n`` and ``d <= m``, as square as possible."""
+    d = int(n**0.5)
+    while d > 1 and n % d:
+        d -= 1
+    return d, n // d
 
 
-def make_test_mesh(shape=(2, 4), axes=("data", "model")):
-    """Small mesh for the multi-device unit tests (8 fake devices)."""
-    return _make_mesh(shape, axes)
+def make_production_mesh(*, multi_pod: bool = False, num_pods: int | None = None):
+    """Mesh shaped from the LIVE topology, not hardcoded constants.
+
+    Single-level: ``(data, model)`` is the squarest factorization of the
+    device count (256 devices -> the classic ``(16, 16)``).  Multi-pod: one
+    pod per process — ``num_pods`` defaults to ``jax.process_count()``, the
+    only topology fact that tells us where the slow network actually is
+    (launch via ``repro.launch.cluster`` or ``jax.distributed.initialize``
+    first).  Every non-factoring combination fails with what to fix, not a
+    reshape error five layers down.
+    """
+    total = jax.device_count()
+    if not multi_pod:
+        d, m = _squarest_factors(total)
+        return _make_mesh((d, m), ("data", "model"))
+    pods = num_pods if num_pods is not None else jax.process_count()
+    if pods <= 1:
+        raise ValueError(
+            "make_production_mesh(multi_pod=True) needs a real process "
+            f"topology, but jax.process_count() == {jax.process_count()} and "
+            "no num_pods override was given.  Launch under "
+            "`python -m repro.launch.cluster --processes N ...` (or call "
+            "jax.distributed.initialize), or pass num_pods= explicitly to "
+            "fake pods on a single process."
+        )
+    if total % pods:
+        raise ValueError(
+            f"{total} devices do not split across {pods} pods "
+            f"({total} % {pods} != 0).  Use a pod count that divides the "
+            "device count, or adjust --local-devices so every process "
+            "contributes the same number of devices."
+        )
+    per_pod = total // pods
+    if per_pod < 2:
+        raise ValueError(
+            f"{per_pod} device(s) per pod cannot form a (data, model) "
+            "in-pod mesh — each pod needs at least 2 devices. Raise "
+            "--local-devices (or lower the pod count)."
+        )
+    d, m = _squarest_factors(per_pod)
+    return _make_mesh((pods, d, m), ("pod", "data", "model"))
+
+
+def make_test_mesh(shape=None, axes=None):
+    """Small mesh for the unit tests.
+
+    Defaults derive from the live process topology: single-process, the
+    classic ``(2, 4)`` over ``("data", "model")`` (8 fake devices);
+    multi-process, one pod per process — ``(process_count,
+    local_device_count)`` over ``("pod", "model")`` — so the same scenario
+    code sees a genuine two-level mesh when launched under
+    ``repro.launch.cluster``.
+    """
+    if shape is None and axes is None and jax.process_count() > 1:
+        return _make_mesh(
+            (jax.process_count(), jax.local_device_count()), ("pod", "model")
+        )
+    return _make_mesh(shape or (2, 4), axes or ("data", "model"))
+
+
+def make_pod_mesh(num_pods: int | None = None, axes=("pod", "q")):
+    """Two-level mesh for the relational engine / pod-axis scenarios.
+
+    ``num_pods`` defaults to ``jax.process_count()`` (one pod per process —
+    the in-pod axis is then pure fast-network); pass it explicitly to carve
+    fake pods out of a single process's devices.  Fails with an actionable
+    error when the device count does not factor.
+    """
+    total = jax.device_count()
+    pods = num_pods if num_pods is not None else jax.process_count()
+    if pods < 1 or total % pods:
+        raise ValueError(
+            f"cannot split {total} devices into {pods} pods; pick a pod "
+            "count dividing the device count (launch via repro.launch."
+            "cluster to control both)"
+        )
+    return _make_mesh((pods, total // pods), axes)
 
 
 def make_context(
     *,
     multi_pod: bool = False,
+    num_pods: int | None = None,
     exchange_impl: str = "round_robin",
     rules: AxisRules | None = None,
     mesh=None,
 ) -> MeshContext:
-    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod, num_pods=num_pods)
     axis_names = mesh.axis_names
     return MeshContext(
         mesh=mesh,
@@ -49,4 +127,9 @@ def make_context(
     )
 
 
-__all__ = ["make_production_mesh", "make_test_mesh", "make_context"]
+__all__ = [
+    "make_production_mesh",
+    "make_test_mesh",
+    "make_pod_mesh",
+    "make_context",
+]

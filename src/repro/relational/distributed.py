@@ -15,16 +15,27 @@ All exchanges are routed through a :class:`repro.core.multiplexer
 .CommMultiplexer` built once per query ("decoupled": the query plans never
 pick transports themselves).  By default (``impl="auto"``) every
 multiplexer knob — transport, ``pack_impl``, ``pipeline_chunks``,
-``transport_chunks`` — is derived from the topology cost model by
+``transport_chunks``, and on pod meshes the ``cross_pod`` build-side
+strategy — is derived from the topology cost model by
 :func:`repro.core.autotune.tune_multiplexer`, fed the per-shard row counts
 and packed row widths of the query's own exchanges.  Passing an explicit
-``impl`` (plus optional ``pack_impl`` / ``num_chunks``) bypasses the tuner
-— that is what the A/B benchmarks and equivalence tests do — and passing
-only ``pack_impl`` / ``num_chunks`` under ``impl="auto"`` pins just those
-knobs while the tuner picks the rest.  Every
-partition exchange's capacity is the static zero-drop bound, and the psum'd
-drop count of each exchange is checked after execution — capacity overflow
-raises instead of silently losing rows.
+``impl`` (plus optional ``pack_impl`` / ``num_chunks`` / ``cross_pod``)
+bypasses the tuner — that is what the A/B benchmarks and equivalence tests
+do — and passing only ``pack_impl`` / ``num_chunks`` / ``cross_pod`` under
+``impl="auto"`` pins just those knobs while the tuner picks the rest.
+Every partition exchange's capacity is the static zero-drop bound, and the
+psum'd drop count of each exchange is checked after execution — capacity
+overflow raises instead of silently losing rows.
+
+Two-level meshes (``num_pods > 1``, the paper's network in the large): rows
+are sharded over ``("pod", "q")``; every partition exchange becomes the
+two-level shuffle (coarse cross-pod hop, then fine in-pod — fine-grained
+traffic never crosses DCI), build sides either replicate across pods or
+reshard by key per the tuned ``cross_pod`` strategy, and the final
+psum/top-k combine crosses the pod axis coarsely.  Results are identical
+to the single-pod plan (the multi-device and multi-process suites assert
+it).  Works both single-process (fake pods) and under
+``repro.launch.cluster`` with one pod per real process.
 """
 
 from __future__ import annotations
@@ -38,7 +49,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.compat import make_mesh, shard_map
+from repro.compat import fetch, make_mesh, shard_map
 from repro.core.autotune import TableStats
 from repro.core.multiplexer import CommMultiplexer, make_multiplexer
 from . import operators as ops
@@ -47,35 +58,58 @@ from .plan import PlannerConfig, choose_join_strategy
 from .table import Table, pad_to, shard_rows
 
 
-def _mesh(num_shards: int):
-    return make_mesh((num_shards,), ("q",))
+def _mesh(num_shards: int, num_pods: int = 1):
+    """Query mesh: 1-D single-pod, or two-level ``(pod, q)`` with the fine
+    shuffle axis strictly in-pod (``num_pods`` defaults to 1 even in a
+    multi-process run — pass it explicitly to engage the two-level plan)."""
+    if num_pods <= 1:
+        return make_mesh((num_shards,), ("q",))
+    if num_shards % num_pods:
+        raise ValueError(
+            f"num_shards={num_shards} does not split across "
+            f"num_pods={num_pods}; pick a pod count dividing the shard count"
+        )
+    return make_mesh((num_pods, num_shards // num_pods), ("pod", "q"))
+
+
+def _axes(num_pods: int):
+    """The mesh axes a table's rows are sharded over (shard_map specs and
+    the final cross-unit psum both use this)."""
+    return ("pod", "q") if num_pods > 1 else ("q",)
 
 
 def _make_mux(
     mesh, impl: str, pack_impl: str | None = None, num_chunks: int | None = None,
     stats: list[TableStats] | None = None,
+    broadcast_stats: TableStats | None = None,
+    cross_pod: str | None = None,
 ) -> CommMultiplexer:
     """One multiplexer per query.
 
     ``impl="auto"`` hands the knobs to the topology autotuner, fed ``stats``
-    (one entry per exchange in the plan); an explicitly passed ``pack_impl``
-    / ``num_chunks`` (non-``None``) pins that knob even under auto.  An
-    explicit ``impl`` uses the caller's knobs verbatim, with the pre-tuner
-    defaults (``"xla"`` pack, unchunked) for anything left unset."""
+    (one entry per exchange in the plan) and ``broadcast_stats`` (the build
+    side of a broadcast-style join, so the tuner can pick the cross-pod
+    strategy on two-level meshes); an explicitly passed ``pack_impl`` /
+    ``num_chunks`` / ``cross_pod`` (non-``None``) pins that knob even under
+    auto.  An explicit ``impl`` uses the caller's knobs verbatim, with the
+    pre-tuner defaults (``"xla"`` pack, unchunked, cross-pod broadcast) for
+    anything left unset."""
     if impl == "auto":
-        mux = make_multiplexer(mesh, auto=True, table_stats=stats or ())
-        if pack_impl is not None or num_chunks is not None:
-            mux = dataclasses.replace(
-                mux,
-                pack_impl=pack_impl if pack_impl is not None else mux.pack_impl,
-                pipeline_chunks=(
-                    num_chunks if num_chunks is not None else mux.pipeline_chunks
-                ),
-            )
-        return mux
+        mux = make_multiplexer(
+            mesh, auto=True, table_stats=stats or (),
+            broadcast_stats=broadcast_stats,
+        )
+        pins = {}
+        if pack_impl is not None:
+            pins["pack_impl"] = pack_impl
+        if num_chunks is not None:
+            pins["pipeline_chunks"] = num_chunks
+        if cross_pod is not None:
+            pins["cross_pod"] = cross_pod
+        return dataclasses.replace(mux, **pins) if pins else mux
     return make_multiplexer(
         mesh, impl=impl, pack_impl=pack_impl or "xla",
-        pipeline_chunks=num_chunks or 1,
+        pipeline_chunks=num_chunks or 1, cross_pod=cross_pod or "broadcast",
     )
 
 
@@ -100,8 +134,12 @@ def _exchange_by_key(
     mux: CommMultiplexer, tbl_cols: dict, tbl_valid, key_name: str,
     columns: list[str], axis: str,
 ) -> tuple[Table, jax.Array]:
-    """Decoupled exchange: repartition rows by hash(key) over ``axis``.
+    """Decoupled exchange: repartition rows by hash(key) over the mesh.
 
+    Routed through :meth:`CommMultiplexer.hash_shuffle_global`: on a
+    single-level mesh that is the plain in-axis shuffle; on a two-level mesh
+    it is the coarse-cross-pod + fine-in-pod exchange (``axis`` is the
+    in-pod axis — the pod hop is the multiplexer's, never the caller's).
     Capacity per (src, dst) message equals the local capacity — the static
     zero-drop bound (a destination can at most receive every row of every
     sender).  Column pruning (paper §3.2.1) happens via ``columns``.
@@ -112,7 +150,7 @@ def _exchange_by_key(
     """
     cap = tbl_valid.shape[0]
     rows = jnp.stack([tbl_cols[c].astype(jnp.int32) for c in columns], axis=1)
-    out_rows, out_valid, dropped = mux.hash_shuffle(
+    out_rows, out_valid, dropped = mux.hash_shuffle_global(
         tbl_cols[key_name].astype(jnp.int32), rows, axis,
         capacity=cap, valid=tbl_valid,
     )
@@ -121,21 +159,40 @@ def _exchange_by_key(
 
 
 def _broadcast_table(
-    mux: CommMultiplexer, tbl_cols: dict, tbl_valid, columns: list[str], axis: str
-) -> Table:
-    """Broadcast exchange (ring all-gather) of a small table."""
+    mux: CommMultiplexer, tbl_cols: dict, tbl_valid, columns: list[str],
+    axis: str, key_name: str | None = None,
+) -> tuple[Table, jax.Array]:
+    """Deliver a join's (small) build side to where the probe rows are.
+
+    Single-level mesh: ring all-gather — every device gets every row.  On a
+    two-level mesh the multiplexer's tuned ``cross_pod`` strategy decides:
+
+    * ``"broadcast"`` — replicate everywhere (in-pod all-gather, then one
+      coarse cross-pod all-gather).  The paper's broadcast join: the build
+      side crosses DCI once per remote pod.
+    * ``"reshard"`` — hash-exchange the build side by ``key_name`` exactly
+      like the probe side; equal keys land on the same device, so the local
+      join sees only its partition.  Wins once the build side outgrows the
+      broadcast threshold.
+
+    Returns ``(table, dropped)`` (broadcast never drops; reshard is under
+    the zero-drop bound, surfaced for the caller's overflow check).
+    """
+    if mux.plan.pod_axis is not None and mux.cross_pod == "reshard":
+        assert key_name is not None, "reshard needs the build-side join key"
+        return _exchange_by_key(mux, tbl_cols, tbl_valid, key_name, columns, axis)
     cols = {}
     for c in columns:
-        g = mux.broadcast(tbl_cols[c], axis)
+        g = mux.broadcast_global(tbl_cols[c], axis)
         cols[c] = g.reshape(-1)
-    v = mux.broadcast(tbl_valid, axis).reshape(-1)
-    return Table(cols, v)
+    v = mux.broadcast_global(tbl_valid, axis).reshape(-1)
+    return Table(cols, v), jnp.int32(0)
 
 
 def _raise_on_dropped(query: str, dropped) -> None:
     """Capacity overflow is an error, not silent row loss (paper: the message
     pool is sized so overflow cannot happen; if it does, results are wrong)."""
-    d = int(jax.device_get(dropped))
+    d = int(fetch(dropped))
     if d:
         raise RuntimeError(
             f"{query}: exchange dropped {d} rows to capacity overflow — "
@@ -148,30 +205,37 @@ def _raise_on_dropped(query: str, dropped) -> None:
 # transfers almost nothing).  Local dense group-by, psum of the group table.
 # ----------------------------------------------------------------------------
 
-def q1_distributed(lineitem: Table, num_shards: int, delta_days: int = 90):
+def q1_distributed(
+    lineitem: Table, num_shards: int, delta_days: int = 90, num_pods: int = 1
+):
     li = _prep(lineitem, num_shards)
+    axes = _axes(num_pods)
 
     def body(cols, valid):
         partial_ = Q.q1_local(Table(cols, valid), delta_days)
-        return jax.tree.map(lambda x: lax.psum(x, "q"), partial_)
+        return jax.tree.map(lambda x: lax.psum(x, axes), partial_)
 
     fn = shard_map(
-        body, mesh=_mesh(num_shards),
-        in_specs=(P("q"), P("q")), out_specs=P(),
+        body, mesh=_mesh(num_shards, num_pods),
+        in_specs=(P(axes), P(axes)), out_specs=P(),
     )
-    return Q.q1_finalize(jax.jit(fn)(*_local(li)))
+    return Q.q1_finalize(fetch(jax.jit(fn)(*_local(li))))
 
 
-def q6_distributed(lineitem: Table, num_shards: int, year: int = 1994):
+def q6_distributed(
+    lineitem: Table, num_shards: int, year: int = 1994, num_pods: int = 1
+):
     li = _prep(lineitem, num_shards)
+    axes = _axes(num_pods)
 
     def body(cols, valid):
-        return lax.psum(Q.q6_local(Table(cols, valid), year), "q")
+        return lax.psum(Q.q6_local(Table(cols, valid), year), axes)
 
     fn = shard_map(
-        body, mesh=_mesh(num_shards), in_specs=(P("q"), P("q")), out_specs=P()
+        body, mesh=_mesh(num_shards, num_pods),
+        in_specs=(P(axes), P(axes)), out_specs=P(),
     )
-    return jax.jit(fn)(*_local(li))
+    return fetch(jax.jit(fn)(*_local(li)))
 
 
 # ----------------------------------------------------------------------------
@@ -188,12 +252,17 @@ def q17_distributed(
     impl: str = "auto",
     pack_impl: str | None = None,
     num_chunks: int | None = None,
+    num_pods: int = 1,
+    cross_pod: str | None = None,
 ):
     li = _prep(lineitem, num_shards)
     pt = _prep(part, num_shards)
-    mesh = _mesh(num_shards)
+    mesh = _mesh(num_shards, num_pods)
+    axes = _axes(num_pods)
     mux = _make_mux(mesh, impl, pack_impl, num_chunks,
-                    stats=[_exchange_stats(li, num_shards, 3)])
+                    stats=[_exchange_stats(li, num_shards, 3)],
+                    broadcast_stats=_exchange_stats(pt, num_shards, 3),
+                    cross_pod=cross_pod)
     planner = PlannerConfig(num_units=num_shards, hybrid=True)
     strategy = choose_join_strategy(
         small_rows=part.capacity, large_rows=lineitem.capacity, cfg=planner
@@ -205,22 +274,24 @@ def q17_distributed(
             ["l_partkey", "l_quantity", "l_extendedprice"], "q",
         )
         assert strategy == "broadcast", strategy  # part is ~30x smaller
-        pt_t = _broadcast_table(
-            mux, pt_cols, pt_valid, ["p_partkey", "p_brand", "p_container"], "q"
+        pt_t, drop_pt = _broadcast_table(
+            mux, pt_cols, pt_valid, ["p_partkey", "p_brand", "p_container"],
+            "q", key_name="p_partkey",
         )
         partial_ = Q.q17_local(li_t, pt_t, brand, container)
-        return lax.psum(partial_, "q"), dropped
+        return lax.psum(partial_, axes), dropped + drop_pt
 
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P("q"), P("q"), P("q"), P("q")), out_specs=(P(), P()),
+        in_specs=(P(axes),) * 4, out_specs=(P(), P()),
         # the replication checker has no rule for pallas_call (the fused
-        # pack kernel); keep it on for the xla pack path
-        check_vma=mux.pack_impl != "pallas",
+        # pack kernel) nor for the two-level ppermute hierarchy; keep it on
+        # for the single-pod xla pack path only
+        check_vma=mux.pack_impl != "pallas" and num_pods == 1,
     )
     result, dropped = jax.jit(fn)(*_local(li), *_local(pt))
     _raise_on_dropped("q17", dropped)
-    return result
+    return fetch(result)
 
 
 # ----------------------------------------------------------------------------
@@ -236,11 +307,13 @@ def q3_distributed(
     impl: str = "auto",
     pack_impl: str | None = None,
     num_chunks: int | None = None,
+    num_pods: int = 1,
 ):
     cu = _prep(customer, num_shards)
     od = _prep(orders, num_shards)
     li = _prep(lineitem, num_shards)
-    mesh = _mesh(num_shards)
+    mesh = _mesh(num_shards, num_pods)
+    axes = _axes(num_pods)
     mux = _make_mux(mesh, impl, pack_impl, num_chunks, stats=[
         _exchange_stats(cu, num_shards, 2),   # customer by c_custkey
         _exchange_stats(od, num_shards, 3),   # orders by o_custkey
@@ -291,16 +364,16 @@ def q3_distributed(
             aggs["revenue"], gvalid, 10,
             {"o_orderkey": gkeys, "revenue": aggs["revenue"]},
         )
-        all_vals = mux.broadcast(vals, "q").reshape(-1)
-        all_keys = mux.broadcast(payload["o_orderkey"], "q").reshape(-1)
-        all_rev = mux.broadcast(payload["revenue"], "q").reshape(-1)
+        all_vals = mux.broadcast_global(vals, "q").reshape(-1)
+        all_keys = mux.broadcast_global(payload["o_orderkey"], "q").reshape(-1)
+        all_rev = mux.broadcast_global(payload["revenue"], "q").reshape(-1)
         top_vals, idx = lax.top_k(all_vals, 10)
         result = {"o_orderkey": all_keys[idx], "revenue": all_rev[idx]}
         return result, drop0 + drop1 + drop2 + drop3
 
     fn = shard_map(
         body, mesh=mesh,
-        in_specs=(P("q"),) * 6, out_specs=(P(), P()),
+        in_specs=(P(axes),) * 6, out_specs=(P(), P()),
         # the top-k combine is replicated by construction (same ring
         # all-gather on every shard) but VMA can't infer that through
         # ppermute — disable the check rather than force an extra psum
@@ -308,7 +381,7 @@ def q3_distributed(
     )
     result, dropped = jax.jit(fn)(*_local(cu), *_local(od), *_local(li))
     _raise_on_dropped("q3", dropped)
-    return result
+    return fetch(result)
 
 
 def _partkey_join_plan(query_fn, part_cols_needed):
@@ -316,12 +389,18 @@ def _partkey_join_plan(query_fn, part_cols_needed):
     the (much smaller) part side — the hybrid planner's broadcast rule."""
 
     def run(lineitem: Table, part: Table, num_shards: int, impl: str = "auto",
-            pack_impl: str | None = None, num_chunks: int | None = None, **kw):
+            pack_impl: str | None = None, num_chunks: int | None = None,
+            num_pods: int = 1, cross_pod: str | None = None, **kw):
         li = _prep(lineitem, num_shards)
         pt = _prep(part, num_shards)
-        mesh = _mesh(num_shards)
+        mesh = _mesh(num_shards, num_pods)
+        axes = _axes(num_pods)
         mux = _make_mux(mesh, impl, pack_impl, num_chunks,
-                        stats=[_exchange_stats(li, num_shards, 5)])
+                        stats=[_exchange_stats(li, num_shards, 5)],
+                        broadcast_stats=_exchange_stats(
+                            pt, num_shards, len(part_cols_needed)
+                        ),
+                        cross_pod=cross_pod)
 
         def body(li_cols, li_valid, pt_cols, pt_valid):
             li_t, dropped = _exchange_by_key(
@@ -329,20 +408,23 @@ def _partkey_join_plan(query_fn, part_cols_needed):
                 ["l_partkey", "l_quantity", "l_extendedprice", "l_discount",
                  "l_shipdate"], "q",
             )
-            pt_t = _broadcast_table(mux, pt_cols, pt_valid, part_cols_needed, "q")
+            pt_t, drop_pt = _broadcast_table(
+                mux, pt_cols, pt_valid, part_cols_needed, "q",
+                key_name="p_partkey",
+            )
             return jax.tree.map(
-                lambda v: lax.psum(v, "q"), query_fn(li_t, pt_t, **kw)
-            ), dropped
+                lambda v: lax.psum(v, axes), query_fn(li_t, pt_t, **kw)
+            ), dropped + drop_pt
 
         fn = shard_map(
             body, mesh=mesh,
-            in_specs=(P("q"), P("q"), P("q"), P("q")), out_specs=(P(), P()),
-            # see q17: no replication rule for pallas_call
-            check_vma=mux.pack_impl != "pallas",
+            in_specs=(P(axes),) * 4, out_specs=(P(), P()),
+            # see q17: no replication rule for pallas_call / two-level hops
+            check_vma=mux.pack_impl != "pallas" and num_pods == 1,
         )
         result, dropped = jax.jit(fn)(*_local(li), *_local(pt))
         _raise_on_dropped(getattr(query_fn, "__name__", "partkey_join"), dropped)
-        return result
+        return fetch(result)
 
     return run
 

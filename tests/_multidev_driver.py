@@ -386,6 +386,116 @@ def scenario_autotune_mux():
     print("PASS autotune_mux")
 
 
+def scenario_two_level_shuffle():
+    """hash_shuffle_two_level on a (2, 4) pod mesh delivers each row to the
+    same device as a flat hash % 8 shuffle over a joint 8-way axis — for
+    every transport/pack combination, including skewed keys."""
+    pod_mesh = make_test_mesh((2, 4), ("pod", "q"))
+    flat_mesh = _mesh1d()
+    rng = np.random.default_rng(42)
+    for name, keys_np in (
+        ("uniform", rng.integers(0, 10_000, 256)),
+        ("skewed", np.where(rng.random(256) < 0.8, 7,
+                            rng.integers(0, 10_000, 256))),
+    ):
+        keys = jnp.asarray(keys_np, jnp.int32)
+        rows = jnp.stack([keys, keys * 5 + 3], axis=1)
+
+        def flat(k, r):
+            return exchange.hash_shuffle(k, r, "x", capacity=32)
+
+        fr, fv, fd = jax.jit(shard_map(
+            flat, mesh=flat_mesh, in_specs=(P("x"), P("x")),
+            out_specs=(P("x"), P("x"), P()),
+        ))(keys, rows)
+        assert int(fd) == 0
+
+        def want_rows(j):
+            r, v = np.asarray(fr), np.asarray(fv)
+            rows_j = r[j * 256:(j + 1) * 256][v[j * 256:(j + 1) * 256]]
+            return rows_j[np.lexsort(rows_j.T)]
+
+        for impl, pack_impl, chunks in (
+            ("xla", "xla", 1), ("round_robin", "xla", 1),
+            ("round_robin", "pallas", 4), ("one_factorization", "xla", 2),
+        ):
+            def two(k, r, impl=impl, pack=pack_impl, ch=chunks):
+                return exchange.hash_shuffle_two_level(
+                    k, r, "q", "pod", capacity=32, impl=impl,
+                    pack_impl=pack, num_chunks=ch,
+                )
+            tr, tv, td = jax.jit(shard_map(
+                two, mesh=pod_mesh, in_specs=(P(("pod", "q")), P(("pod", "q"))),
+                out_specs=(P(("pod", "q")), P(("pod", "q")), P()),
+                check_vma=False,
+            ))(keys, rows)
+            assert int(td) == 0, (name, impl, pack_impl, chunks, int(td))
+            tr, tv = np.asarray(tr), np.asarray(tv)
+            # device (pod p, inner i) = flat device p*4 + i; each holds
+            # [4 * 2 * 32] = 256 output slots
+            for j in range(8):
+                rows_j = tr[j * 256:(j + 1) * 256][tv[j * 256:(j + 1) * 256]]
+                got = rows_j[np.lexsort(rows_j.T)]
+                np.testing.assert_array_equal(
+                    got, want_rows(j),
+                    err_msg=f"{name}/{impl}/{pack_impl}/c{chunks}/dev{j}",
+                )
+
+    # float32 rows with int32 keys: hop 1 cannot fold the keys into the row
+    # matrix (dtype mismatch) and takes the separate-buffers path
+    keys = jnp.asarray(rng.integers(0, 10_000, 256), jnp.int32)
+    frows = jnp.stack([keys * 1.5, keys * 0.25], axis=1).astype(jnp.float32)
+    fr, fv, fd = jax.jit(shard_map(
+        lambda k, r: exchange.hash_shuffle(k, r, "x", capacity=32),
+        mesh=flat_mesh, in_specs=(P("x"), P("x")),
+        out_specs=(P("x"), P("x"), P()),
+    ))(keys, frows)
+    tr, tv, td = jax.jit(shard_map(
+        lambda k, r: exchange.hash_shuffle_two_level(
+            k, r, "q", "pod", capacity=32
+        ),
+        mesh=pod_mesh, in_specs=(P(("pod", "q")), P(("pod", "q"))),
+        out_specs=(P(("pod", "q")), P(("pod", "q")), P()), check_vma=False,
+    ))(keys, frows)
+    assert int(fd) == 0 and int(td) == 0
+    fr, fv, tr, tv = map(np.asarray, (fr, fv, tr, tv))
+    for j in range(8):
+        a = fr[j * 256:(j + 1) * 256][fv[j * 256:(j + 1) * 256]]
+        b = tr[j * 256:(j + 1) * 256][tv[j * 256:(j + 1) * 256]]
+        np.testing.assert_array_equal(
+            a[np.lexsort(a.T)], b[np.lexsort(b.T)], err_msg=f"float/dev{j}"
+        )
+    print("PASS two_level_shuffle")
+
+
+def scenario_tpch_pod_mesh_1proc():
+    """TPC-H on a two-level (2 pods x 4) mesh — single process, fake DCI:
+    Q17 matches the oracle under BOTH cross-pod build-side strategies, and
+    Q3's two chained two-level exchanges + cross-pod top-k combine match the
+    single-pod run exactly."""
+    from repro.relational import datagen, oracle
+    from repro.relational.distributed import q3_distributed, q17_distributed
+
+    tabs = datagen.gen_all(0.01)
+    li, pt = tabs["lineitem"], tabs["part"]
+    want17 = oracle.q17_oracle(li, pt)
+    for cross_pod in ("broadcast", "reshard"):
+        got = q17_distributed(
+            li, pt, num_shards=8, num_pods=2, impl="round_robin",
+            pack_impl="pallas", cross_pod=cross_pod,
+        )
+        np.testing.assert_allclose(float(got), want17, rtol=1e-3,
+                                   err_msg=cross_pod)
+
+    flat = q3_distributed(tabs["customer"], tabs["orders"], li, num_shards=8)
+    pod = q3_distributed(tabs["customer"], tabs["orders"], li,
+                         num_shards=8, num_pods=2)
+    for k in flat:
+        np.testing.assert_array_equal(np.asarray(flat[k]), np.asarray(pod[k]),
+                                      err_msg=k)
+    print("PASS tpch_pod_mesh_1proc")
+
+
 def scenario_tpch_pack_equiv():
     """Scheduled transport + Pallas fused pack matches the monolithic-XLA
     baseline bit-exactly on the TPC-H join queries (Q17 and Q3)."""

@@ -1,0 +1,201 @@
+"""Pod-axis scenarios run as a REAL multi-process cluster (2 procs x 4 fake
+CPU devices each, by default).
+
+Invoked via the launcher:
+
+    python -m repro.launch.cluster --processes 2 --local-devices 4 \
+        tests/_multiproc_driver.py <scenario>
+
+Every process runs the same scenario; collectives over the ``pod`` mesh axis
+cross an actual process boundary (Gloo over localhost — the CI stand-in for
+DCI).  Each scenario prints "PASS <name>" on success from every process; any
+exception fails the run.  ``init_cluster()`` must run before anything
+touches jax devices, so keep module-level imports jax-free.
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.cluster import init_cluster  # noqa: E402
+
+INFO = init_cluster()
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.compat import fetch, shard_map  # noqa: E402
+from repro.core import exchange  # noqa: E402
+from repro.launch.mesh import make_pod_mesh, make_production_mesh  # noqa: E402
+
+
+def _pod_mesh():
+    mesh = make_pod_mesh()
+    assert mesh.axis_names == ("pod", "q"), mesh.axis_names
+    return mesh
+
+
+def scenario_hierarchical_psum():
+    """RS-in-pod -> AR-cross-pod -> AG-in-pod equals a flat psum bit-exactly
+    across the process boundary (int32 and exactly-representable float32)."""
+    mesh = make_pod_mesh(axes=("pod", "data"))
+    n = mesh.devices.size
+    for dtype, hi in ((jnp.int32, 1 << 20), (jnp.float32, 1 << 12)):
+        g = jax.random.randint(
+            jax.random.PRNGKey(0), (n * 4, 3), 0, hi
+        ).astype(dtype)
+
+        def hier(g):
+            return exchange.hierarchical_psum_tree({"g": g}, "data", "pod")["g"]
+
+        def flat(g):
+            return exchange.flat_psum_tree({"g": g}, ("pod", "data"))["g"]
+
+        spec = P(("pod", "data"))
+        a = jax.jit(shard_map(hier, mesh=mesh, in_specs=spec, out_specs=spec))(g)
+        b = jax.jit(shard_map(flat, mesh=mesh, in_specs=spec, out_specs=spec))(g)
+        np.testing.assert_array_equal(fetch(a), fetch(b), err_msg=str(dtype))
+    print("PASS hierarchical_psum")
+
+
+def scenario_exchange_over_dci_raises():
+    """The hybrid plan rejects any fine-grained shuffle routed over the pod
+    axis — at trace time, before a single byte crosses the slow network."""
+    from repro.core.multiplexer import make_multiplexer
+
+    mesh = _pod_mesh()
+    mux = make_multiplexer(mesh)
+    assert mux.plan.large_axes == ("pod",), mux.plan
+    x = jnp.zeros((mesh.devices.shape[0], 4), jnp.int32)
+    for attempt in (
+        lambda: mux.all_to_all(x, "pod"),
+        lambda: mux.hash_shuffle(x[:, 0], x, "pod", capacity=2),
+        lambda: mux.shuffle_consume(
+            x, "pod", lambda acc, c, s: acc, jnp.int32(0)
+        ),
+    ):
+        try:
+            attempt()
+        except ValueError as e:
+            assert "large-network axis" in str(e), e
+        else:
+            raise AssertionError("exchange over the DCI axis did not raise")
+    print("PASS exchange_over_dci_raises")
+
+
+def scenario_two_level_shuffle():
+    """The two-level exchange (coarse cross-process hop + fine in-pod
+    shuffle) loses no rows and lands every row on the device owning its
+    global hash — across a real process boundary."""
+    mesh = _pod_mesh()
+    pods, n = mesh.devices.shape
+    N = pods * n
+    T = 64
+    keys = jax.random.randint(jax.random.PRNGKey(3), (N * T,), 0, 10_000,
+                              dtype=jnp.int32)
+    rows = jnp.stack([keys, keys * 2 + 1], axis=1)
+
+    def shuffle(k, r):
+        out_rows, out_valid, dropped = exchange.hash_shuffle_two_level(
+            k, r, "q", "pod", capacity=T
+        )
+        me = jax.lax.axis_index("pod") * n + jax.lax.axis_index("q")
+        h = exchange.fibonacci_hash(
+            out_rows[:, 0].astype(jnp.uint32)
+        ) % jnp.uint32(N)
+        ok = jnp.where(out_valid, h == me.astype(jnp.uint32), True).all()
+        return out_valid.sum()[None], dropped, ok[None]
+
+    spec = P(("pod", "q"))
+    fn = shard_map(shuffle, mesh=mesh, in_specs=(spec, spec),
+                   out_specs=(spec, P(), spec), check_vma=False)
+    kept, dropped, ok = jax.jit(fn)(keys, rows)
+    assert int(fetch(dropped)) == 0
+    assert int(fetch(kept).sum()) == N * T
+    assert bool(fetch(ok).all())
+    print("PASS two_level_shuffle")
+
+
+def scenario_production_mesh():
+    """make_production_mesh derives the pod axis from the live process
+    topology instead of the old hardcoded (2, 16, 16)."""
+    mesh = make_production_mesh(multi_pod=True)
+    assert mesh.axis_names == ("pod", "data", "model")
+    assert mesh.devices.shape[0] == jax.process_count(), mesh.devices.shape
+    assert mesh.devices.size == jax.device_count()
+    print("PASS production_mesh")
+
+
+def scenario_tpch_pod_mesh():
+    """TPC-H Q3 and Q17 on the two-level mesh match the single-host numpy
+    oracle — the full vertical slice: pod-aware planner, two-level
+    exchanges, cross-pod combine."""
+    from repro.relational import datagen, oracle
+    from repro.relational.distributed import q3_distributed, q17_distributed
+
+    mesh = _pod_mesh()
+    pods, n = mesh.devices.shape
+    tabs = datagen.gen_all(0.01)
+
+    got17 = q17_distributed(
+        tabs["lineitem"], tabs["part"], num_shards=pods * n, num_pods=pods
+    )
+    np.testing.assert_allclose(
+        float(got17), oracle.q17_oracle(tabs["lineitem"], tabs["part"]),
+        rtol=1e-3,
+    )
+
+    got3 = q3_distributed(
+        tabs["customer"], tabs["orders"], tabs["lineitem"],
+        num_shards=pods * n, num_pods=pods,
+    )
+    want3 = oracle.q3_oracle(tabs["customer"], tabs["orders"], tabs["lineitem"])
+    assert [int(k) for k in got3["o_orderkey"]] == \
+        [int(k) for k in want3["o_orderkey"]]
+    np.testing.assert_allclose(
+        np.asarray(got3["revenue"], np.float64),
+        np.asarray(want3["revenue"], np.float64), rtol=1e-3,
+    )
+    print("PASS tpch_pod_mesh")
+
+
+def scenario_tuner_dci_aware():
+    """tune_multiplexer on the live two-level mesh prices the DCI hop and
+    picks a cross-pod strategy for the build side."""
+    from repro.core.autotune import TableStats, exchange_makespan, tune_multiplexer
+
+    mesh = _pod_mesh()
+    pods, n = mesh.devices.shape
+    stats = TableStats(rows=4096, row_bytes=16)
+    cfg = tune_multiplexer(
+        mesh, stats, broadcast_stats=TableStats(rows=128, row_bytes=12)
+    )
+    assert cfg.impl in ("xla", "round_robin", "one_factorization")
+    assert cfg.cross_pod in ("broadcast", "reshard"), cfg
+    # The two-level makespan must charge the coarse DCI hop: strictly more
+    # than the same exchange priced single-pod.
+    one = exchange_makespan(stats, n)
+    two = exchange_makespan(stats, n, num_pods=pods)
+    assert two > one, (one, two)
+    # A big build side flips the choice to reshard.
+    cfg_big = tune_multiplexer(
+        mesh, stats, broadcast_stats=TableStats(rows=1 << 20, row_bytes=64)
+    )
+    assert cfg_big.cross_pod == "reshard", cfg_big
+    print("PASS tuner_dci_aware")
+
+
+SCENARIOS = {
+    name.removeprefix("scenario_"): fn
+    for name, fn in list(globals().items())
+    if name.startswith("scenario_")
+}
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    names = list(SCENARIOS) if which == "all" else [which]
+    for nm in names:
+        SCENARIOS[nm]()

@@ -18,6 +18,7 @@ from repro.core.autotune import (
     TableStats,
     candidate_configs,
     exchange_makespan,
+    pod_strategy_times,
     tune_multiplexer,
 )
 from repro.core.multiplexer import make_multiplexer
@@ -152,6 +153,93 @@ def test_tune_trivial_on_single_unit_axis():
     mesh1 = types.SimpleNamespace(axis_names=("q",), devices=np.empty((1,)))
     cfg = tune_multiplexer(mesh1, TableStats(rows=4096, row_bytes=16))
     assert cfg.pipeline_chunks == 1 and cfg.modeled_s == 0.0
+
+
+def _pod_mesh_stub(pods=2, n=4):
+    """Two-level mesh stand-in (the tuner reads axis_names + shape only)."""
+    return types.SimpleNamespace(
+        axis_names=("pod", "q"), devices=np.empty((pods, n))
+    )
+
+
+# ----------------------------------------------------------------------------
+# The DCI (network in the large) extension.
+# ----------------------------------------------------------------------------
+
+def test_phase_time_network_selects_dci_constants():
+    chip = dataclasses.replace(
+        T.V5E, ici_link_bandwidth=100e9, dci_bandwidth=10e9,
+        ici_launch_latency=1e-6, dci_launch_latency=7e-6,
+    )
+    msg = 1e6
+    ici = T.phase_time(msg, chip, network="ici")
+    dci = T.phase_time(msg, chip, network="dci")
+    assert ici == pytest.approx(1e-6 + msg / 100e9)
+    assert dci == pytest.approx(7e-6 + msg / 10e9)
+    with pytest.raises(ValueError, match="network level"):
+        T.phase_time(msg, chip, network="numa")
+
+
+def test_shuffle_time_dci_scales_with_dci_bandwidth():
+    fast = dataclasses.replace(ZERO_LAT, dci_launch_latency=0.0)
+    slow = dataclasses.replace(fast, dci_bandwidth=fast.dci_bandwidth / 4)
+    a = T.shuffle_time(4, 1e6, fast, "round_robin", topology="switch",
+                       network="dci")
+    b = T.shuffle_time(4, 1e6, slow, "round_robin", topology="switch",
+                       network="dci")
+    assert b == pytest.approx(4 * a)
+
+
+def test_makespan_charges_the_pod_hop():
+    """Two-level pricing = coarse DCI hop + the P-fold in-pod shuffle:
+    strictly above single-pod, and monotone in the pod count."""
+    stats = TableStats(rows=4096, row_bytes=16)
+    ms = [exchange_makespan(stats, 8, num_pods=p) for p in (1, 2, 4, 8)]
+    assert ms == sorted(ms) and ms[0] < ms[1]
+
+
+def test_pod_strategy_threshold_flips_with_build_size():
+    """Tiny build sides broadcast (the paper's n-1 threshold); large ones
+    reshard — each byte crosses DCI once instead of once per pod."""
+    n, pods = 4, 2
+    tiny = pod_strategy_times(TableStats(rows=64, row_bytes=8), n, pods)
+    huge = pod_strategy_times(TableStats(rows=1 << 22, row_bytes=64), n, pods)
+    assert set(tiny) == {"broadcast", "reshard"}
+    assert tiny["broadcast"] < tiny["reshard"]
+    assert huge["reshard"] < huge["broadcast"]
+
+
+def test_tune_cross_pod_strategy():
+    mesh = _pod_mesh_stub()
+    probe = TableStats(rows=4096, row_bytes=16)
+    cfg = tune_multiplexer(
+        mesh, probe, broadcast_stats=TableStats(rows=64, row_bytes=8)
+    )
+    assert cfg.cross_pod == "broadcast"
+    assert cfg.cross_pod_modeled_s is not None
+    cfg_big = tune_multiplexer(
+        mesh, probe, broadcast_stats=TableStats(rows=1 << 22, row_bytes=64)
+    )
+    assert cfg_big.cross_pod == "reshard"
+    # single-pod meshes never pick a cross-pod strategy
+    flat = tune_multiplexer(
+        _mesh8(), probe, broadcast_stats=TableStats(rows=64, row_bytes=8)
+    )
+    assert flat.cross_pod is None
+
+
+def test_tune_on_pod_mesh_returns_legal_knobs():
+    cfg = tune_multiplexer(_pod_mesh_stub(), TableStats(rows=1 << 16,
+                                                        row_bytes=16))
+    assert cfg.impl in ("xla", "round_robin", "one_factorization")
+    assert (1 << 16) % cfg.pipeline_chunks == 0
+    # candidates are priced with the pod hop: every modeled time exceeds the
+    # bare single-pod model of the same knob setting
+    for impl, pack, C, t, modeled in cfg.candidates:
+        single = exchange_makespan(
+            TableStats(rows=1 << 16, row_bytes=16), 4, impl, pack, C, t
+        )
+        assert modeled > single
 
 
 def test_make_multiplexer_auto_applies_tuned_knobs():

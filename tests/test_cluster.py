@@ -1,0 +1,100 @@
+"""Launcher + topology-derived mesh construction (no multi-device mesh).
+
+The live 2-process behaviour runs in tests/test_multiprocess.py; here we
+cover the spawner mechanics with jax-free workers (fast) and the actionable
+failure modes of the pod-shape derivation.
+"""
+
+import sys
+
+import pytest
+
+from repro.launch.cluster import (
+    ENV_LOCAL_DEVICES,
+    ENV_NUM_PROCESSES,
+    ENV_PROCESS_ID,
+    init_cluster,
+    run_local_cluster,
+)
+from repro.launch.mesh import (
+    _squarest_factors,
+    make_pod_mesh,
+    make_production_mesh,
+)
+
+
+def test_squarest_factors():
+    assert _squarest_factors(256) == (16, 16)
+    assert _squarest_factors(8) == (2, 4)
+    assert _squarest_factors(7) == (1, 7)
+    assert _squarest_factors(12) == (3, 4)
+
+
+def test_run_local_cluster_sets_worker_env():
+    outputs = run_local_cluster(
+        ["-c",
+         "import os;print(os.environ['%s'], os.environ['%s'], "
+         "os.environ['%s'])" % (ENV_PROCESS_ID, ENV_NUM_PROCESSES,
+                                ENV_LOCAL_DEVICES)],
+        num_processes=2, local_devices=3, timeout_s=60, echo=False,
+    )
+    assert [o.split()[0] for o in outputs] == ["0", "1"]
+    assert all(o.split()[1:] == ["2", "3"] for o in outputs)
+
+
+def test_run_local_cluster_surfaces_worker_failure():
+    with pytest.raises(RuntimeError, match="boom"):
+        run_local_cluster(
+            ["-c", "raise SystemExit('boom')"],
+            num_processes=2, timeout_s=60, echo=False,
+        )
+
+
+def test_run_local_cluster_timeout_kills_workers():
+    with pytest.raises(RuntimeError, match="timed out"):
+        run_local_cluster(
+            ["-c", "import time; time.sleep(60)"],
+            num_processes=1, timeout_s=2, echo=False,
+        )
+
+
+def test_init_cluster_is_noop_outside_a_launch(monkeypatch):
+    for var in (ENV_PROCESS_ID, ENV_NUM_PROCESSES, ENV_LOCAL_DEVICES):
+        monkeypatch.delenv(var, raising=False)
+    info = init_cluster()
+    assert info.num_processes == 1 and info.process_id == 0
+
+
+def test_production_mesh_single_process_needs_pod_override():
+    # pytest runs single-process: multi_pod without an override must point
+    # at the launcher, not die in a reshape five layers down.
+    with pytest.raises(ValueError, match="repro.launch.cluster"):
+        make_production_mesh(multi_pod=True)
+
+
+def test_production_mesh_rejects_non_factoring_pods():
+    # 1 CPU device visible in-process: 1 % 2 != 0
+    with pytest.raises(ValueError, match="do not split"):
+        make_production_mesh(multi_pod=True, num_pods=2)
+
+
+def test_pod_mesh_rejects_non_factoring_pods():
+    with pytest.raises(ValueError, match="pods"):
+        make_pod_mesh(num_pods=3)
+
+
+def test_cluster_cli_runs_a_trivial_worker():
+    from repro.launch import cluster
+
+    rc = cluster.main(
+        ["--processes", "2", "--timeout", "60", "--",
+         "-c", "print('worker alive')"]
+    )
+    assert rc == 0
+
+
+def test_cluster_cli_missing_worker():
+    from repro.launch import cluster
+
+    with pytest.raises(SystemExit):
+        cluster.main(["--processes", "2"])

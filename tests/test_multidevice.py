@@ -18,11 +18,13 @@ SCENARIOS = [
     "streaming_consume",
     "hierarchical_psum",
     "hash_shuffle",
+    "two_level_shuffle",
     "moe_ep",
     "sharded_train_equiv",
     "ckpt_elastic",
     "distributed_q17",
     "distributed_q14_q19",
+    "tpch_pod_mesh_1proc",
     "decode_sharded_equiv",
 ]
 

@@ -20,7 +20,11 @@ import subprocess
 import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-DEFAULT_FILES = ("README.md", os.path.join("docs", "ARCHITECTURE.md"))
+DEFAULT_FILES = (
+    "README.md",
+    os.path.join("docs", "ARCHITECTURE.md"),
+    os.path.join("docs", "MULTIHOST.md"),
+)
 FENCE = re.compile(r"^```(\w*)\s*$")
 
 
