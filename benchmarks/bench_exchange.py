@@ -18,7 +18,6 @@ destination count (no ``[rows, num_dest]`` one-hot), plus a bit-exactness
 check between the two implementations.
 """
 
-import glob
 import json
 import os
 import re
@@ -28,8 +27,9 @@ from .bench_scaling import query_time
 from .common import emit, time_jit
 
 
-def fig12b():
+def fig12b() -> list[dict]:
     n = 6
+    records = []
     for name, sched, cpu in (
         ("memsql_like_tcp", False, 0.45),
         ("vortex_like_tcp", False, 0.20),
@@ -39,7 +39,10 @@ def fig12b():
         for gbps in (0.125, 1.0, 2.0, 4.0):
             s = base / query_time(n, gbps, sched, cpu)
             emit(f"fig12b/{name}", f"{s:.2f}", "x", f"link={gbps}GB/s")
+            records.append({"engine": name, "link_gbps": gbps,
+                            "speedup_x": round(s, 2)})
     emit("fig12b/paper_claim", "12", "x", "HyPer RDMA 4xQDR vs GbE (paper)")
+    return records
 
 
 def moe_exchange_ab(art_dir: str = "artifacts/dryrun_final"):
@@ -64,7 +67,8 @@ def moe_exchange_ab(art_dir: str = "artifacts/dryrun_final"):
             emit(f"moe_ab/{arch}/sched_gain", f"{t_unsched/t_sched:.2f}", "x", "")
 
 
-def pack_ab(rows: int = 8192, width: int = 4):
+def pack_ab(rows: int = 8192, width: int = 4,
+            dests: tuple = (8, 64, 256)) -> list[dict]:
     """Partition/pack hot path: XLA one-hot vs the fused Pallas kernel.
 
     The XLA reference ranks rows with a ``[rows, num_dest + 1]``
@@ -87,7 +91,8 @@ def pack_ab(rows: int = 8192, width: int = 4):
     data = jax.random.randint(
         jax.random.fold_in(key, 1), (rows, width), 0, 1000, dtype=jnp.int32
     )
-    for n_dest in (8, 64, 256):
+    records = []
+    for n_dest in dests:
         cap = max(rows // n_dest * 2, 16)  # 2x fair share
         dest = (keys % n_dest).astype(jnp.int32)
         outs = {}
@@ -117,17 +122,32 @@ def pack_ab(rows: int = 8192, width: int = 4):
             emit(f"pack_ab/ndest{n_dest}/{impl}/flops", f"{flops:.0f}", "", "")
             emit(f"pack_ab/ndest{n_dest}/{impl}/wall", f"{wall*1e3:.2f}", "ms",
                  "CPU interpret mode — HLO shape evidence is the signal")
+            records.append({
+                "rows": rows, "n_dest": n_dest, "impl": impl,
+                "materializes_onehot": materializes, "peak_2d_s32": peak2d,
+                "wall_ms": round(wall * 1e3, 3),
+            })
         import numpy as np
 
         for a, b in zip(outs["xla"], outs["pallas"]):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         emit(f"pack_ab/ndest{n_dest}/bit_exact", "true", "", "xla == pallas")
+    return records
 
 
-def run():
+def run(smoke: bool = False) -> dict:
+    """Full mode emits CSV only; smoke mode also returns the JSON record
+    (reduced sizes) that ``benchmarks.run --smoke`` writes to
+    ``BENCH_exchange.json``."""
+    if smoke:
+        return {
+            "fig12b": fig12b(),
+            "pack_ab": pack_ab(rows=2048, dests=(8, 64)),
+        }
     fig12b()
     moe_exchange_ab()
     pack_ab()
+    return {}
 
 
 if __name__ == "__main__":

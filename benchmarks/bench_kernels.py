@@ -8,9 +8,8 @@ the kernels exist for), plus correctness deltas.
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from .common import emit
 
 

@@ -1,0 +1,104 @@
+"""Static vs continuous batching: the serving face of the flexible exchange.
+
+The paper's critique of the classic exchange operator — a FIXED assignment
+of work to workers load-imbalances no matter how fast the network is — is
+exactly what static-batch decoding does to cache slots: the batch retires
+at the pace of its longest sequence.  This bench runs the SAME mixed-length
+workload through both engines (fake CPU devices; smoke-sized models) and
+reports the slot-occupancy and latency trajectory CI records per PR:
+
+* ``slot_steps``   — decode steps x batch slots, the occupancy currency
+  (strictly fewer for continuous is the acceptance bar);
+* ``ttft``         — per-request time to first token (continuous admits as
+  slots free instead of waiting for a full bucket);
+* ``tok_s``        — end-to-end generated-token throughput.
+
+``run(smoke=True)`` returns the JSON record written to ``BENCH_serve.json``
+by ``benchmarks.run --smoke`` and uploaded by the CI ``bench-smoke`` job.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import emit
+
+
+def bench_serve(
+    arch: str = "minicpm-2b",
+    requests: int = 12,
+    batch: int = 4,
+    prompt_len: int = 16,
+    max_new: int = 12,
+    seed: int = 0,
+) -> dict:
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import registry as R
+    from repro.serve import (
+        ContinuousEngine, Request, ServeEngine, engine_record,
+        generate_bucketed, make_mixed_workload,
+    )
+
+    cfg = get_smoke_config(arch)
+    api = R.build(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    capacity = prompt_len + max_new + 1
+
+    reqs_c = make_mixed_workload(
+        cfg.vocab_size, requests, [max(prompt_len // 2, 4), prompt_len],
+        max_new, np.random.default_rng(seed),
+    )
+    reqs_s = [Request(prompt=r.prompt.copy(), max_new_tokens=r.max_new_tokens)
+              for r in reqs_c]
+
+    cont = ContinuousEngine(api, batch_size=batch, capacity=capacity, seed=seed)
+    t0 = time.perf_counter()
+    cont.serve(params, reqs_c)
+    rec_c = engine_record(reqs_c, cont.stats, time.perf_counter() - t0)
+
+    static = ServeEngine(api, batch_size=batch, capacity=capacity, seed=seed)
+    t0 = time.perf_counter()
+    generate_bucketed(static, params, reqs_s)
+    rec_s = engine_record(reqs_s, static.stats, time.perf_counter() - t0)
+
+    for name, rec in (("static", rec_s), ("continuous", rec_c)):
+        emit(f"serve/{arch}/{name}/slot_steps", rec["slot_steps"], "slot*steps", "")
+        emit(f"serve/{arch}/{name}/tok_s", rec["tok_s"], "tok/s",
+             "CPU smoke — compile dominates wall; slot_steps is the signal")
+        if "ttft_mean_s" in rec:
+            emit(f"serve/{arch}/{name}/ttft_mean", f"{rec['ttft_mean_s']*1e3:.0f}",
+                 "ms", "")
+    ratio = rec_s["slot_steps"] / max(rec_c["slot_steps"], 1)
+    emit(f"serve/{arch}/slot_steps_ratio", f"{ratio:.2f}", "x",
+         "static / continuous (higher = continuous wins)")
+    assert rec_c["slot_steps"] < rec_s["slot_steps"], (
+        f"continuous must use strictly fewer slot-steps: {rec_c['slot_steps']} "
+        f"vs {rec_s['slot_steps']}"
+    )
+    return {
+        "arch": arch,
+        "workload": {
+            "requests": requests, "batch": batch, "prompt_lens":
+            sorted({int(r.prompt.shape[0]) for r in reqs_c}),
+            "max_new": max_new, "seed": seed,
+        },
+        "static": rec_s,
+        "continuous": rec_c,
+        "slot_steps_ratio": round(ratio, 3),
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    if smoke:
+        return bench_serve(requests=12, batch=4, prompt_len=16, max_new=12)
+    return bench_serve(arch="qwen2.5-3b", requests=16, batch=4,
+                       prompt_len=32, max_new=16)
+
+
+if __name__ == "__main__":
+    print("name,value,unit,note")
+    run(smoke=True)

@@ -8,7 +8,6 @@ section reports bytes shuffled (the paper's "data shuffled" row) instead.
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.relational import datagen, oracle, queries

@@ -1,12 +1,20 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig10|skew|conn|tpch|fig3|fig12|kern|roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only fig10|skew|conn|tpch|fig3|fig12|kern|serve|roofline]
+    PYTHONPATH=src python -m benchmarks.run --smoke [--json-dir artifacts/bench]
 
-Emits ``name,value,unit,note`` CSV lines.  The roofline section reads the
-dry-run artifacts (run ``python -m repro.launch.dryrun`` first).
+Emits ``name,value,unit,note`` CSV lines.  ``--smoke`` runs the reduced
+CI lane — the static-vs-continuous serve comparison and the exchange pack
+A/B — and writes ``BENCH_serve.json`` / ``BENCH_exchange.json`` under
+``--json-dir``; the CI ``bench-smoke`` job uploads those as artifacts, so
+the perf trajectory is recorded per PR instead of living only in logs.
+The roofline section reads the dry-run artifacts (run
+``python -m repro.launch.dryrun`` first).
 """
 
 import argparse
+import json
+import os
 
 from . import (
     bench_autotune,
@@ -15,25 +23,26 @@ from . import (
     bench_kernels,
     bench_scaling,
     bench_schedule,
+    bench_serve,
     bench_skew,
     bench_tpch,
 )
 
 SECTIONS = {
     "fig10": bench_schedule.run,     # Fig 10(b)/(c): scheduling vs contention
-    "skew": bench_skew.run,          # \u00a73.1 skew table
-    "conn": bench_connections.run,   # \u00a73.1 connection/buffer scaling
+    "skew": bench_skew.run,          # §3.1 skew table
+    "conn": bench_connections.run,   # §3.1 connection/buffer scaling
     "tpch": bench_tpch.run,          # Table 2: query runtimes + shuffle bytes
     "fig3": bench_scaling.run,       # Fig 3/11: scale-out per transport
     "fig12": bench_exchange.run,     # Fig 5/12(b) + MoE exchange A/B
     "kern": bench_kernels.run,       # kernel traffic models
     "autotune": bench_autotune.run,  # modeled vs measured multiplexer tuning
+    "serve": bench_serve.run,        # static vs continuous batching
 }
 
 
 def roofline():
     import glob
-    import json
 
     from repro.launch.roofline import format_table, from_artifact
 
@@ -51,11 +60,32 @@ def roofline():
         print("roofline: no artifacts found (run repro.launch.dryrun first)")
 
 
+def smoke(json_dir: str) -> None:
+    """The CI bench lane: serve + exchange records -> BENCH_*.json."""
+    os.makedirs(json_dir, exist_ok=True)
+    print("# --- serve (smoke) ---")
+    serve_rec = bench_serve.run(smoke=True)
+    print("# --- fig12 (smoke) ---")
+    exchange_rec = bench_exchange.run(smoke=True)
+    for name, rec in (("BENCH_serve.json", serve_rec),
+                      ("BENCH_exchange.json", exchange_rec)):
+        path = os.path.join(json_dir, name)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, sort_keys=True)
+        print(f"# wrote {path}")
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default="all")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced CI lane; writes BENCH_*.json to --json-dir")
+    p.add_argument("--json-dir", default=os.path.join("artifacts", "bench"))
     args = p.parse_args()
     print("name,value,unit,note")
+    if args.smoke:
+        smoke(args.json_dir)
+        return
     for name, fn in SECTIONS.items():
         if args.only in ("all", name):
             print(f"# --- {name} ---")

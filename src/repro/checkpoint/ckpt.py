@@ -24,7 +24,6 @@ import json
 import os
 import re
 import shutil
-import tempfile
 from typing import Any
 
 import jax

@@ -115,6 +115,47 @@ class TunedConfig:
         )
 
 
+def ep_capacity(
+    tokens_per_shard: int, top_k: int, num_experts: int, capacity_factor: float
+) -> int:
+    """Per-expert message-buffer capacity (the paper's fixed-size reusable
+    pool): ``ceil(capacity_factor * fair_share)`` with a floor of 4.
+
+    THE shared definition — ``models.moe`` sizes its dispatch buffers with
+    this and :func:`decode_table_stats` prices them with it, so the tuner
+    always models the shapes the MoE layer actually ships.
+    """
+    fair = tokens_per_shard * top_k / num_experts
+    return max(int(math.ceil(capacity_factor * fair)), 4)
+
+
+def decode_table_stats(cfg, batch_size: int, num_shards: int) -> TableStats:
+    """Shape of the EP token dispatch for ONE decode step, per parallel unit.
+
+    At decode every slot contributes one token, so each unit packs
+    ``batch_size / num_shards`` tokens x ``top_k`` choices into its
+    ``E x C`` per-expert capacity buffers (``C`` from :func:`ep_capacity`,
+    the same sizing the MoE layer uses) and ships those — the same
+    fixed-size message pool as at train time, just tiny (tens of rows of
+    ``d_model`` activations).  Feeding THIS to :func:`tune_multiplexer` is
+    what makes the tuner price the per-step messages correctly: launch
+    latency dominates at this size, so it collapses to the unchunked
+    scheduled transport instead of inheriting chunking tuned for
+    relational tables.
+
+    ``cfg`` is duck-typed (``num_experts``/``top_k``/``capacity_factor``/
+    ``d_model``/``dtype``) so core does not import the configs package.
+    """
+    import numpy as np
+
+    E = int(getattr(cfg, "num_experts", 0) or 1)
+    k = int(getattr(cfg, "top_k", 0) or 1)
+    t_loc = max(1, batch_size // max(num_shards, 1))
+    C = ep_capacity(t_loc, k, E, float(getattr(cfg, "capacity_factor", 1.0)))
+    row_bytes = int(cfg.d_model) * np.dtype(getattr(cfg, "dtype", "float32")).itemsize
+    return TableStats(rows=E * C, row_bytes=row_bytes)
+
+
 def exchange_makespan(
     stats: TableStats,
     n: int,
@@ -518,6 +559,8 @@ def calibrate_chip(
 __all__ = [
     "TableStats",
     "TunedConfig",
+    "decode_table_stats",
+    "ep_capacity",
     "exchange_makespan",
     "pod_strategy_times",
     "candidate_configs",

@@ -60,7 +60,6 @@ derived from the topology cost model by :mod:`repro.core.autotune`.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Literal
 
 import jax

@@ -51,8 +51,8 @@ modeled pack+shuffle makespan for the actual message sizes and mesh.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-import functools
 import warnings
 from typing import Any, Callable, Sequence
 
@@ -343,6 +343,38 @@ def make_multiplexer(
     )
 
 
+# ----------------------------------------------------------------------------
+# Ambient multiplexer: lets code that cannot take a mux argument (the MoE
+# layer inside a model's decode step) still route its exchanges through the
+# session's tuned policy object.
+# ----------------------------------------------------------------------------
+
+_ACTIVE_MUX: list[CommMultiplexer] = []
+
+
+@contextlib.contextmanager
+def use_multiplexer(mux: CommMultiplexer):
+    """Make ``mux`` the ambient multiplexer inside the with-block.
+
+    The serving engine wraps its decode loop in this so the expert-parallel
+    dispatch (``models/moe.py``) traces against the engine's auto-tuned
+    multiplexer — same schedules as the relational exchanges — without
+    threading a mux through the uniform model API.  Consulted at TRACE time:
+    jit caches compiled under one mux are only reused within the same knobs
+    (the engine owns both the mux and its jitted callables, so this holds).
+    """
+    _ACTIVE_MUX.append(mux)
+    try:
+        yield mux
+    finally:
+        _ACTIVE_MUX.pop()
+
+
+def current_multiplexer() -> CommMultiplexer | None:
+    """The innermost :func:`use_multiplexer` mux, or None."""
+    return _ACTIVE_MUX[-1] if _ACTIVE_MUX else None
+
+
 def donate_buffers(fn: Callable, argnums: tuple[int, ...]) -> Callable:
     """Message-pool discipline: reuse communication buffers across calls.
 
@@ -358,5 +390,7 @@ __all__ = [
     "CommMultiplexer",
     "make_multiplexer",
     "resolve_schedule_impl",
+    "use_multiplexer",
+    "current_multiplexer",
     "donate_buffers",
 ]

@@ -31,7 +31,6 @@ hypothesis property tests):
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 Phase = tuple[tuple[int, int], ...]  # ((src, dst), ...)
 

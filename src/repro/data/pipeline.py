@@ -25,7 +25,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Any, Callable, Iterator
+from typing import Any, Iterator
 
 import numpy as np
 

@@ -183,12 +183,26 @@ def hash_partition_ranks(keys, valid, num_partitions, block=256):
 
 
 def moe_dispatch(dest, num_dest, capacity, block=256):
+    """(slot [T], counts [num_dest]); overflow/padding -> num_dest*capacity.
+
+    Arbitrary ``T``: rows are padded with the inert id ``num_dest`` (matches
+    no expert, ranks nowhere, slots to the drop bin) so the kernel's
+    block-grid contract holds — the decode-step dispatch ships a handful of
+    tokens per slot, far from any block multiple.
+    """
     T = dest.shape[0]
     blk = min(block, T)
-    if kernels_enabled() and T % blk == 0:
+    if kernels_enabled():
         from .moe_dispatch import moe_dispatch as kern
 
-        return kern(dest, num_dest, capacity, block=blk, interpret=_interpret())
+        pad = (-T) % blk
+        d = dest
+        if pad:
+            d = jnp.concatenate(
+                [d, jnp.full((pad,), num_dest, dest.dtype)]
+            )
+        slot, counts = kern(d, num_dest, capacity, block=blk, interpret=_interpret())
+        return slot[:T], counts
     return R.moe_dispatch_ref(dest, num_dest, capacity)
 
 

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import defaultdict
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -18,8 +18,6 @@ decide which network it crosses.
 from __future__ import annotations
 
 import dataclasses
-import json
-import math
 import re
 from typing import Any
 

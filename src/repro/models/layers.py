@@ -12,9 +12,7 @@ Conventions
 
 from __future__ import annotations
 
-import dataclasses
 import math
-from functools import partial
 from typing import Any
 
 import jax
@@ -159,7 +157,9 @@ def sdpa(
 
     GQA: ``H`` must be a multiple of ``KH``; query heads are grouped.  The
     softmax runs in f32.  Sk is the (static) cache capacity at decode; the
-    dynamic fill level arrives via ``kv_valid_len``.
+    dynamic fill level arrives via ``kv_valid_len`` — a scalar (one fill
+    level for the whole batch, the static-batch decode) or a ``[B]`` vector
+    (per-slot fill levels, the continuous-batching decode).
     """
     B, Sq, H, Dh = q.shape
     Sk, KH = k.shape[1], k.shape[2]
@@ -172,9 +172,15 @@ def sdpa(
         qpos = jnp.arange(Sq)[:, None] + q_offset
         kpos = jnp.arange(Sk)[None, :]
         mask = kpos <= qpos
+    bmask = mask[None, None, None]  # broadcast over [B, KH, G, ...]
     if kv_valid_len is not None:
-        mask = mask & (jnp.arange(Sk)[None, :] < kv_valid_len)
-    logits = jnp.where(mask[None, None, None], logits, -1e30)
+        kvl = jnp.asarray(kv_valid_len)
+        if kvl.ndim == 0:
+            bmask = bmask & (jnp.arange(Sk)[None, :] < kvl)[None, None, None]
+        else:  # per-slot valid lengths [B]
+            valid = jnp.arange(Sk)[None, :] < kvl[:, None]          # [B, Sk]
+            bmask = bmask & valid[:, None, None, None, :]
+    logits = jnp.where(bmask, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
     return out.reshape(B, Sq, H, v.shape[-1])
@@ -344,6 +350,37 @@ def attention_decode(
     return attention_out(params, o), cache_k, cache_v
 
 
+def attention_decode_slots(
+    params: Params,
+    cfg: ModelConfig,
+    x: jax.Array,            # [B, 1, d]
+    cache_k: jax.Array,      # [B, S, KH, Dh]
+    cache_v: jax.Array,
+    positions: jax.Array,    # [B] int32: per-slot write position / context len
+    cos: jax.Array,
+    sin: jax.Array,
+):
+    """One decode step with a per-slot position vector (continuous batching).
+
+    Identical numerics to :func:`attention_decode` when every slot sits at
+    the same position — the scatter writes the same bytes the
+    ``dynamic_update_slice`` would, and the per-slot ``kv_valid_len`` builds
+    the same mask — which is what keeps the continuous engine bit-identical
+    to the static one on uniform batches (tests/test_serve.py).
+    """
+    q, k, v = attention_qkv(params, cfg, x)
+    if cfg.rope_kind in ("rope", "mrope"):
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    b = jnp.arange(x.shape[0])
+    cache_k = cache_k.at[b, positions].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[b, positions].set(v[:, 0].astype(cache_v.dtype))
+    cache_k = shard(cache_k, "batch", "kv_seq", None, None)
+    cache_v = shard(cache_v, "batch", "kv_seq", None, None)
+    o = sdpa(q, cache_k, cache_v, causal=False, kv_valid_len=positions + 1)
+    return attention_out(params, o), cache_k, cache_v
+
+
 # ----------------------------------------------------------------------------
 # MLA attention (deepseek-v2): low-rank compressed KV cache.
 # ----------------------------------------------------------------------------
@@ -407,9 +444,14 @@ def _mla_attend_block(params, cfg: ModelConfig, q_nope, q_rope, c, k_rope, *, ca
     mask = jnp.ones((Sq, Sk), jnp.bool_)
     if causal:
         mask = jnp.arange(Sk)[None, :] <= (jnp.arange(Sq)[:, None] + q_offset)
+    bmask = mask[None, None]  # broadcast over [B, H, ...]
     if kv_valid_len is not None:
-        mask = mask & (jnp.arange(Sk)[None, :] < kv_valid_len)
-    logits = jnp.where(mask[None, None], logits, -1e30)
+        kvl = jnp.asarray(kv_valid_len)
+        if kvl.ndim == 0:
+            bmask = bmask & (jnp.arange(Sk)[None, :] < kvl)[None, None]
+        else:  # per-slot valid lengths [B]
+            bmask = bmask & (jnp.arange(Sk)[None, :] < kvl[:, None])[:, None, None, :]
+    logits = jnp.where(bmask, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1).astype(dt)
     o_c = jnp.einsum("bhst,btr->bshr", w, c)  # attend over compressed values
     o = jnp.einsum("bshr,rhv->bshv", o_c, params["wv_b"].astype(dt))
@@ -463,6 +505,21 @@ def mla_decode(params, cfg: ModelConfig, x, cache_c, cache_kr, pos, cos, sin):
     out = _mla_attend(
         params, cfg, q_nope, q_rope, cache_c, cache_kr,
         causal=False, kv_valid_len=pos + 1,
+    )
+    return out, cache_c, cache_kr
+
+
+def mla_decode_slots(params, cfg: ModelConfig, x, cache_c, cache_kr, positions, cos, sin):
+    """MLA decode with per-slot positions ``[B]`` (continuous batching)."""
+    q_nope, q_rope, c_new, kr_new = _mla_qk(params, cfg, x, cos, sin)
+    b = jnp.arange(x.shape[0])
+    cache_c = cache_c.at[b, positions].set(c_new[:, 0].astype(cache_c.dtype))
+    cache_kr = cache_kr.at[b, positions].set(kr_new[:, 0].astype(cache_kr.dtype))
+    cache_c = shard(cache_c, "batch", "kv_seq", None)
+    cache_kr = shard(cache_kr, "batch", "kv_seq", None)
+    out = _mla_attend(
+        params, cfg, q_nope, q_rope, cache_c, cache_kr,
+        causal=False, kv_valid_len=positions + 1,
     )
     return out, cache_c, cache_kr
 

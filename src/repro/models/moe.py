@@ -22,17 +22,16 @@ Three execution paths (``cfg.moe_impl``):
 
 from __future__ import annotations
 
-import math
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import exchange
-from repro.distributed.sharding import current_mesh_context, shard
+from repro.distributed.sharding import current_mesh_context
 from . import layers as L
 
 
@@ -117,19 +116,58 @@ def moe_dense(params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
 # ----------------------------------------------------------------------------
 
 def _ep_capacity(cfg: ModelConfig, tokens_per_shard: int, num_shards: int) -> int:
-    """Per-expert message-buffer capacity (paper: fixed-size reusable pool)."""
-    fair = tokens_per_shard * cfg.top_k / cfg.num_experts
-    cap = int(math.ceil(cfg.capacity_factor * fair))
-    return max(cap, 4)
+    """Per-expert message-buffer capacity (paper: fixed-size reusable pool).
+
+    Delegates to :func:`repro.core.autotune.ep_capacity` — the ONE place the
+    formula lives, so the tuner's decode-shaped pricing can never drift from
+    the buffers this layer actually ships.
+    """
+    from repro.core.autotune import ep_capacity
+
+    return ep_capacity(tokens_per_shard, cfg.top_k, cfg.num_experts,
+                       cfg.capacity_factor)
+
+
+def _dispatch_slots(flat_dest: jax.Array, E: int, C: int, pack_impl: str):
+    """slot(t, k) = expert * C + arrival rank; overflow -> the E*C drop bin.
+
+    Two implementations of the same capacity-bounded packing (the paper's
+    fixed-size reusable message pool), selected by the multiplexer's
+    ``pack_impl`` knob exactly like the relational pack paths:
+
+    * ``"xla"`` — one-hot/cumsum reference: materializes a ``[T, E]``
+      running histogram in HBM;
+    * ``"pallas"`` — :func:`repro.kernels.ops.moe_dispatch`: the arrival
+      ranks come from per-block VMEM counters, nothing of shape ``[T, E]``
+      exists (interpret mode off-TPU).
+
+    Both produce bit-identical slots; returns ``(slot [T], kept [T])``.
+    """
+    if pack_impl == "pallas":
+        from repro.kernels import ops
+
+        slot, _ = ops.moe_dispatch(flat_dest, E, C)
+        return slot, slot < E * C
+    onehot = jax.nn.one_hot(flat_dest, E, dtype=jnp.int32)
+    rank = jnp.cumsum(onehot, axis=0) - onehot
+    my_rank = jnp.take_along_axis(rank, flat_dest[:, None], axis=1)[:, 0]
+    kept = my_rank < C
+    return jnp.where(kept, flat_dest * C + my_rank, E * C), kept
 
 
 def _ep_moe_local(params, cfg: ModelConfig, x, axis_name: str):
     """Per-shard body (inside shard_map, manual over the exchange axis).
 
-    x: [T_loc, d] — this shard's slice of the token stream.
+    x: [T_loc, d] — this shard's slice of the token stream.  When an
+    ambient :func:`repro.core.multiplexer.use_multiplexer` is active (the
+    continuous serving engine's decode loop), the dispatch/return shuffles
+    and the pack impl follow ITS tuned policy; otherwise the legacy
+    ``cfg.exchange_impl`` transport with the XLA pack.
     """
     from repro.compat import axis_size
+    from repro.core.multiplexer import current_multiplexer
 
+    mux = current_multiplexer()
     m = axis_size(axis_name)
     T_loc, d = x.shape
     E = cfg.num_experts
@@ -141,15 +179,11 @@ def _ep_moe_local(params, cfg: ModelConfig, x, axis_name: str):
     w, idx = route(params, cfg, x)  # [T_loc, k]
 
     # -- step 2: partition tuples into per-expert messages (the message pool).
-    # slot(t, k) = expert * C + arrival rank; overflow beyond C is dropped
-    # (capacity-bounded buffers — the paper's fixed-size reusable messages).
     flat_dest = idx.reshape(-1)                       # [T_loc * k] expert ids
     flat_rows = jnp.repeat(x, cfg.top_k, axis=0)      # token copy per choice
-    onehot = jax.nn.one_hot(flat_dest, E, dtype=jnp.int32)
-    rank = jnp.cumsum(onehot, axis=0) - onehot
-    my_rank = jnp.take_along_axis(rank, flat_dest[:, None], axis=1)[:, 0]
-    kept = my_rank < C
-    slot = jnp.where(kept, flat_dest * C + my_rank, E * C)  # E*C = dropped bin
+    slot, kept = _dispatch_slots(
+        flat_dest, E, C, mux.pack_impl if mux is not None else "xla"
+    )
     buffers = jnp.zeros((E * C + 1, d), dt).at[slot].set(
         jnp.where(kept[:, None], flat_rows, 0)
     )[:-1]
@@ -157,8 +191,13 @@ def _ep_moe_local(params, cfg: ModelConfig, x, axis_name: str):
 
     # -- step 3: the multiplexer shuffle (scheduled all-to-all over experts'
     # owner shards).  buffers [E, C, d] -> [m, E_loc * C, d] by owner.
+    def ship(v):
+        if mux is not None:
+            return mux.all_to_all(v, axis_name)
+        return exchange.all_to_all(v, axis_name, impl=cfg.exchange_impl)
+
     send = buffers.reshape(m, E_loc * C, d)
-    recv = exchange.all_to_all(send, axis_name, impl=cfg.exchange_impl)
+    recv = ship(send)
     # recv[j] = slice from shard j destined to my local experts.
     recv = recv.reshape(m, E_loc, C, d).transpose(1, 0, 2, 3).reshape(E_loc, m * C, d)
 
@@ -170,7 +209,7 @@ def _ep_moe_local(params, cfg: ModelConfig, x, axis_name: str):
 
     # -- step 7: return trip through the same schedule.
     back = out.reshape(E_loc, m, C, d).transpose(1, 0, 2, 3).reshape(m, E_loc * C, d)
-    ret = exchange.all_to_all(back, axis_name, impl=cfg.exchange_impl)
+    ret = ship(back)
     ret = ret.reshape(E * C, d)
     ret = jnp.concatenate([ret, jnp.zeros((1, d), dt)])  # dropped bin reads 0
 

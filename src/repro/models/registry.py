@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
-from . import layers as L
 
 # Number of image-patch positions the VLM stub prepends (qwen2-vl dynamic
 # resolution -> fixed budget here; the frontend itself is out of scope).
@@ -45,10 +44,16 @@ class ModelApi:
     init_cache: Callable[[int, int], Any]
     param_specs: Any           # pytree of logical-axis tuples (matches init)
     cache_spec_fn: Callable[[], Any]
+    # Per-slot decode (continuous batching): (params, tokens [B,1], cache,
+    # positions [B]) -> (logits, cache).  None for families whose cache is
+    # not a per-position KV map (ssm/hybrid/encdec) — the continuous engine
+    # rejects those with an actionable error.
+    decode_step_slots: Callable[[Any, jax.Array, Any, jax.Array], tuple[jax.Array, Any]] | None = None
 
 
 def build(cfg: ModelConfig) -> ModelApi:
     m = _module(cfg)
+    slots = getattr(m, "decode_step_slots", None)
     return ModelApi(
         cfg=cfg,
         init=lambda key: m.init(key, cfg),
@@ -60,6 +65,12 @@ def build(cfg: ModelConfig) -> ModelApi:
         init_cache=lambda bs, cap: m.init_cache(cfg, bs, cap),
         param_specs=m.specs(cfg),
         cache_spec_fn=lambda: m.cache_specs(cfg),
+        decode_step_slots=(
+            None if slots is None
+            else lambda params, tokens, cache, positions: slots(
+                params, cfg, tokens, cache, positions
+            )
+        ),
     )
 
 

@@ -13,7 +13,6 @@ patterns (deepseek-v2's dense first layer) become multiple segments.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any
 
 import jax
@@ -133,6 +132,25 @@ def _layer_decode(p, cfg: ModelConfig, kind: str, x, cache, pos, cos, sin):
     else:
         a, ck, cv = L.attention_decode(
             p["attn"], cfg, h, cache["k"], cache["v"], pos, cos, sin
+        )
+        new_cache = {"k": ck, "v": cv}
+    x = x + r * a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + r * _ffn(p["ffn"], cfg, kind, h)
+    return x, new_cache
+
+
+def _layer_decode_slots(p, cfg: ModelConfig, kind: str, x, cache, positions, cos, sin):
+    r = jnp.asarray(cfg.residual_scale, x.dtype)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attn_kind == "mla":
+        a, c, kr = L.mla_decode_slots(
+            p["attn"], cfg, h, cache["c"], cache["kr"], positions, cos, sin
+        )
+        new_cache = {"c": c, "kr": kr}
+    else:
+        a, ck, cv = L.attention_decode_slots(
+            p["attn"], cfg, h, cache["k"], cache["v"], positions, cos, sin
         )
         new_cache = {"k": ck, "v": cv}
     x = x + r * a
@@ -268,6 +286,38 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
     return logits[:, 0], new_cache
 
 
+def decode_step_slots(params, cfg: ModelConfig, tokens, cache, positions):
+    """One token per SLOT at per-slot positions: the continuous-batching step.
+
+    ``tokens [B, 1]``, ``positions [B] int32`` -> (logits [B, vocab], cache).
+    Every slot decodes every step (fixed batch shape — no retrace as slots
+    come and go); dead slots compute garbage that the engine masks out
+    host-side.  With all positions equal this is bit-identical to
+    :func:`decode_step` — same embed/rope/scatter/mask/unembed numerics —
+    which the serve tests rely on.
+    """
+    x = L.embed(params["embedding"], cfg, tokens)
+    B = x.shape[0]
+    p = positions[:, None]  # [B, 1]
+    if cfg.rope_kind == "mrope":
+        p = jnp.broadcast_to(p[None], (3, B, 1))
+    cos, sin = L.rope_tables(cfg, p, _rope_dim(cfg))
+
+    new_cache = {}
+    for i, seg in enumerate(segments_for(cfg)):
+        def body(x, xs, kind=seg.kind):
+            p_l, cache_l = xs
+            x, new_cache_l = _layer_decode_slots(
+                p_l, cfg, kind, x, cache_l, positions, cos, sin
+            )
+            return x, new_cache_l
+
+        x, new_cache[f"seg{i}"] = lax.scan(body, x, (params[f"seg{i}"], cache[f"seg{i}"]))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embedding"], cfg, x)
+    return logits[:, 0], new_cache
+
+
 def prefill(params, cfg: ModelConfig, batch):
     """Process the whole prompt; return last-token logits + filled cache.
 
@@ -318,5 +368,6 @@ __all__ = [
     "init_cache",
     "cache_specs",
     "decode_step",
+    "decode_step_slots",
     "prefill",
 ]

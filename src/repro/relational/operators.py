@@ -18,7 +18,6 @@ exactly the paper's: partition/broadcast decisions + the scheduled exchange.
 
 from __future__ import annotations
 
-from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,5 +1,23 @@
-"""Serving substrate: batched prefill/decode engine with KV caches."""
+"""Serving substrate: static + continuous batching engines over KV caches."""
 
-from .engine import ServeEngine, Request, sample_token
+from .engine import (
+    ContinuousEngine,
+    Request,
+    ServeEngine,
+    SlotAllocator,
+    engine_record,
+    generate_bucketed,
+    make_mixed_workload,
+    sample_token,
+)
 
-__all__ = ["ServeEngine", "Request", "sample_token"]
+__all__ = [
+    "ServeEngine",
+    "ContinuousEngine",
+    "SlotAllocator",
+    "Request",
+    "sample_token",
+    "generate_bucketed",
+    "make_mixed_workload",
+    "engine_record",
+]

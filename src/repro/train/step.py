@@ -19,7 +19,6 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.distributed.sharding import (
     MeshContext,
     build_shardings,

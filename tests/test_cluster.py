@@ -5,7 +5,6 @@ cover the spawner mechanics with jax-free workers (fast) and the actionable
 failure modes of the pod-shape derivation.
 """
 
-import sys
 
 import pytest
 

@@ -13,7 +13,11 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 CHECKER = os.path.join(REPO, "tools", "check_docs.py")
-DOCS = ["README.md", os.path.join("docs", "ARCHITECTURE.md")]
+DOCS = [
+    "README.md",
+    os.path.join("docs", "ARCHITECTURE.md"),
+    os.path.join("docs", "SERVING.md"),
+]
 
 
 @pytest.mark.parametrize("doc", DOCS)

@@ -26,6 +26,7 @@ SCENARIOS = [
     "distributed_q14_q19",
     "tpch_pod_mesh_1proc",
     "decode_sharded_equiv",
+    "serve_continuous_ep",
 ]
 
 

@@ -5,7 +5,6 @@ pyproject.toml); without it this module skips cleanly at collection instead
 of erroring the whole suite.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,7 +5,6 @@ cleanly at collection (the non-property schedule checks live in
 tests/test_multiplexer.py, which has no optional deps).
 """
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="hypothesis is an optional test extra")

@@ -1,0 +1,281 @@
+"""Continuous-batching serve engine: equivalence, invariants, admission.
+
+The continuous engine must be a pure scheduling change: same tokens as the
+static engine on uniform workloads (bit-identical greedy), strictly better
+slot occupancy on mixed ones, and no resource leaks (the allocator's
+``free + live == batch_size`` invariant).  Also covers the static engine's
+first-token key-split bugfix and the decode-shaped autotuner stats.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import registry as R
+from repro.serve import (
+    ContinuousEngine,
+    Request,
+    ServeEngine,
+    SlotAllocator,
+    generate_bucketed,
+    sample_token,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def minicpm():
+    cfg = get_smoke_config("minicpm-2b")
+    api = R.build(cfg)
+    params = api.init(KEY)
+    return cfg, api, params
+
+
+def _requests(cfg, rng, plens, max_news, **kw):
+    return [
+        Request(
+            prompt=rng.integers(0, cfg.vocab_size, pl, dtype=np.int32),
+            max_new_tokens=int(mn), **kw,
+        )
+        for pl, mn in zip(plens, max_news)
+    ]
+
+
+def _clone(reqs):
+    return [
+        Request(prompt=r.prompt.copy(), max_new_tokens=r.max_new_tokens,
+                eos_id=r.eos_id, arrival_step=r.arrival_step)
+        for r in reqs
+    ]
+
+
+# ---------------------------------------------------------------------------
+# SlotAllocator.
+# ---------------------------------------------------------------------------
+
+def test_slot_allocator_invariant_and_reuse():
+    alloc = SlotAllocator(3)
+    rs = [Request(prompt=np.zeros(1, np.int32), max_new_tokens=1) for _ in range(4)]
+    s0, s1, s2 = (alloc.admit(r) for r in rs[:3])
+    assert {s0, s1, s2} == {0, 1, 2} and alloc.num_free == 0
+    alloc.check()
+    with pytest.raises(RuntimeError):
+        alloc.admit(rs[3])
+    assert alloc.release(s1) is rs[1]
+    alloc.check()
+    s3 = alloc.admit(rs[3])
+    assert s3 == s1  # eviction-on-finish: the freed slot is reused
+    alloc.check()
+    assert len(alloc.live) + alloc.num_free == 3
+
+
+# ---------------------------------------------------------------------------
+# Continuous vs static equivalence.
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_static_greedy(minicpm):
+    """Same-length prompts, same budgets: bit-identical greedy outputs."""
+    cfg, api, params = minicpm
+    rng = np.random.default_rng(0)
+    reqs_s = _requests(cfg, rng, [8] * 4, [6] * 4)
+    reqs_c = _clone(reqs_s)
+
+    ServeEngine(api, batch_size=4, capacity=32).generate(params, reqs_s)
+    ContinuousEngine(api, batch_size=4, capacity=32).serve(params, reqs_c)
+    for a, b in zip(reqs_s, reqs_c):
+        assert a.out_tokens == b.out_tokens
+        assert b.done and b.ttft_s is not None and b.admitted_step == 0
+
+
+def test_mixed_lengths_finish_all_no_slot_leak(minicpm):
+    """Mixed prompt/output lengths: everything finishes, nothing leaks,
+    strictly fewer slot-steps than the bucketed static baseline."""
+    cfg, api, params = minicpm
+    rng = np.random.default_rng(1)
+    reqs = _requests(cfg, rng, [8, 16] * 5, rng.integers(2, 12, 10))
+    clone = _clone(reqs)
+
+    cont = ContinuousEngine(api, batch_size=4, capacity=32)
+    cont.serve(params, reqs)
+    cont.alloc.check()  # free + live == batch_size
+    assert cont.alloc.num_free == cont.batch_size  # all slots returned
+    assert all(r.done for r in reqs)
+    assert all(1 <= len(r.out_tokens) <= r.max_new_tokens for r in reqs)
+    assert cont.stats["finished"] == len(reqs)
+
+    static = ServeEngine(api, batch_size=4, capacity=32)
+    generate_bucketed(static, params, clone)
+    assert cont.stats["slot_steps"] < static.stats["slot_steps"]
+    # both engines generate the same token budget per request
+    for a, b in zip(reqs, clone):
+        assert len(a.out_tokens) == len(b.out_tokens)
+
+
+def test_arrival_steps_delay_admission(minicpm):
+    cfg, api, params = minicpm
+    rng = np.random.default_rng(2)
+    reqs = _requests(cfg, rng, [8] * 4, [3] * 4)
+    for i, r in enumerate(reqs):
+        r.arrival_step = 4 * i
+    eng = ContinuousEngine(api, batch_size=2, capacity=32)
+    eng.serve(params, reqs)
+    assert all(r.done for r in reqs)
+    for r in reqs:
+        assert r.admitted_step >= r.arrival_step
+        # TTFT is anchored at ARRIVAL, not serve() start: a late arrival
+        # must not be charged for the wall time before it existed
+        assert 0 <= r.ttft_s <= eng.stats["wall"]
+    assert reqs[-1]._t_arrive > 0
+
+
+# ---------------------------------------------------------------------------
+# EOS / early stop + slot refill.
+# ---------------------------------------------------------------------------
+
+def test_eos_frees_slot_for_pending_request(minicpm):
+    cfg, api, params = minicpm
+    rng = np.random.default_rng(3)
+    # learn what token greedy produces third, then use it as EOS
+    probe = _requests(cfg, rng, [8], [12])
+    ContinuousEngine(api, batch_size=2, capacity=64).serve(params, probe)
+    eos = probe[0].out_tokens[2]
+
+    # same prompt with that EOS stops early ...
+    short = Request(prompt=probe[0].prompt.copy(), max_new_tokens=12, eos_id=eos)
+    # ... and a queued request gets the freed slot while a long one runs
+    longer = Request(prompt=probe[0].prompt.copy(), max_new_tokens=12)
+    queued = Request(prompt=probe[0].prompt.copy(), max_new_tokens=2)
+    eng = ContinuousEngine(api, batch_size=2, capacity=64)
+    eng.serve(params, [longer, short, queued])
+    assert short.out_tokens[-1] == eos
+    assert short.out_tokens == probe[0].out_tokens[: probe[0].out_tokens.index(eos) + 1]
+    assert queued.done and queued.admitted_step == short.finished_step + 1
+    eng.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Admission rejection.
+# ---------------------------------------------------------------------------
+
+def test_capacity_overflow_admission_rejected(minicpm):
+    cfg, api, params = minicpm
+    eng = ContinuousEngine(api, batch_size=2, capacity=16)
+    bad = Request(prompt=np.zeros(16, np.int32), max_new_tokens=1)
+    with pytest.raises(ValueError, match="admission rejected"):
+        eng.serve(params, [bad])
+    # the rejection happens before any state mutates: a valid workload
+    # still runs on the same engine
+    ok = _requests(cfg, np.random.default_rng(4), [8, 8], [2, 2])
+    eng.serve(params, ok)
+    assert all(r.done for r in ok)
+
+
+def test_non_kv_family_rejected():
+    cfg = get_smoke_config("mamba2-1.3b")
+    api = R.build(cfg)
+    assert api.decode_step_slots is None
+    with pytest.raises(NotImplementedError, match="decode_step_slots"):
+        ContinuousEngine(api, batch_size=2, capacity=16)
+
+
+# ---------------------------------------------------------------------------
+# Static-engine key-split bugfix (satellite): temperature > 0.
+# ---------------------------------------------------------------------------
+
+def test_static_first_token_key_is_split(minicpm):
+    """The first sampled token must use a key SPLIT from the engine key, and
+    the key must advance even for max_new == 1 batches (the old code reused
+    the constructor key for every batch's first token)."""
+    cfg, api, params = minicpm
+    prompt = np.arange(8, dtype=np.int32)
+
+    eng = ServeEngine(api, batch_size=1, capacity=32, temperature=1.0, seed=7)
+    k0 = eng.key
+    (r1,) = eng.generate(params, [Request(prompt=prompt.copy(), max_new_tokens=1)])
+    assert not np.array_equal(np.asarray(eng.key), np.asarray(k0))
+
+    # manual replication of the key discipline
+    logits, _ = api.prefill(params, {"tokens": jnp.asarray(prompt[None])})
+    _, sub = jax.random.split(jax.random.PRNGKey(7))
+    want = int(sample_token(sub, logits, 1.0)[0])
+    assert r1.out_tokens == [want]
+
+    # two consecutive max_new==1 batches draw DIFFERENT first-token keys
+    (r2,) = eng.generate(params, [Request(prompt=prompt.copy(), max_new_tokens=1)])
+    key2, sub2 = jax.random.split(jax.random.split(jax.random.PRNGKey(7))[0])
+    want2 = int(sample_token(sub2, logits, 1.0)[0])
+    assert r2.out_tokens == [want2]
+
+
+def test_temperature_seeded_determinism(minicpm):
+    cfg, api, params = minicpm
+    rng = np.random.default_rng(5)
+    reqs = _requests(cfg, rng, [8] * 3, [6, 3, 5])
+    a, b = _clone(reqs), _clone(reqs)
+    ServeEngine(api, batch_size=4, capacity=32, temperature=0.8, seed=11).generate(params, a)
+    ServeEngine(api, batch_size=4, capacity=32, temperature=0.8, seed=11).generate(params, b)
+    assert [r.out_tokens for r in a] == [r.out_tokens for r in b]
+
+    c, d = _clone(reqs), _clone(reqs)
+    ContinuousEngine(api, batch_size=4, capacity=32, temperature=0.8, seed=11).serve(params, c)
+    ContinuousEngine(api, batch_size=4, capacity=32, temperature=0.8, seed=11).serve(params, d)
+    assert [r.out_tokens for r in c] == [r.out_tokens for r in d]
+
+
+# ---------------------------------------------------------------------------
+# Decode-shaped autotuner stats (EP dispatch pricing).
+# ---------------------------------------------------------------------------
+
+def test_decode_table_stats_shape_and_tuning():
+    from types import SimpleNamespace
+
+    from repro.core.autotune import decode_table_stats, tune_multiplexer
+
+    from repro.models.moe import _ep_capacity
+
+    cfg = get_smoke_config("olmoe-1b-7b")
+    stats = decode_table_stats(cfg, batch_size=8, num_shards=4)
+    # the tuner must price EXACTLY the capacity buffers the MoE layer ships:
+    # rows == E * C with C from the layer's own sizing (shared ep_capacity)
+    assert stats.rows == cfg.num_experts * _ep_capacity(cfg, 8 // 4, 4)
+    assert stats.row_bytes == cfg.d_model * np.dtype(cfg.dtype).itemsize
+
+    # tiny per-step messages: the tuner must NOT inherit chunking — launch
+    # latency dominates, so it collapses to the unchunked transport
+    mesh = SimpleNamespace(axis_names=("data", "model"), devices=np.empty((2, 4)))
+    tuned = tune_multiplexer(mesh, [stats])
+    assert tuned.pipeline_chunks == 1 and tuned.transport_chunks == 1
+
+
+def test_moe_dispatch_slots_pallas_matches_xla():
+    """The kernel-backed dispatch (mux pack_impl='pallas') is bit-identical
+    to the one-hot reference, including non-block-multiple token counts
+    (decode ships a handful of tokens per step)."""
+    from repro.models.moe import _dispatch_slots
+
+    for T, E, C in [(8, 8, 4), (300, 8, 7), (512, 16, 9)]:
+        dest = jax.random.randint(jax.random.PRNGKey(T), (T,), 0, E, dtype=jnp.int32)
+        sx, kx = _dispatch_slots(dest, E, C, "xla")
+        sp, kp = _dispatch_slots(dest, E, C, "pallas")
+        np.testing.assert_array_equal(np.asarray(sx), np.asarray(sp))
+        np.testing.assert_array_equal(np.asarray(kx), np.asarray(kp))
+
+
+def test_request_stats_populated(minicpm):
+    cfg, api, params = minicpm
+    rng = np.random.default_rng(6)
+    reqs = _requests(cfg, rng, [8, 8, 16], [5, 8, 3])
+    eng = ContinuousEngine(api, batch_size=2, capacity=32)
+    eng.serve(params, reqs)
+    for r in reqs:
+        assert r.ttft_s is not None and r.ttft_s >= 0
+        assert r.admitted_step is not None and r.finished_step is not None
+        if len(r.out_tokens) > 1:
+            assert r.decode_tok_s is not None and r.decode_tok_s > 0
+    # engine aggregates are consistent
+    assert eng.stats["slot_steps"] == eng.stats["decode_steps"] * eng.batch_size
+    assert eng.stats["live_slot_steps"] <= eng.stats["slot_steps"]
+    assert eng.stats["admitted"] == eng.stats["finished"] == len(reqs)

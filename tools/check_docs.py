@@ -24,6 +24,7 @@ DEFAULT_FILES = (
     "README.md",
     os.path.join("docs", "ARCHITECTURE.md"),
     os.path.join("docs", "MULTIHOST.md"),
+    os.path.join("docs", "SERVING.md"),
 )
 FENCE = re.compile(r"^```(\w*)\s*$")
 
