@@ -4,10 +4,11 @@
     PYTHONPATH=src python -m benchmarks.run --smoke [--json-dir artifacts/bench]
 
 Emits ``name,value,unit,note`` CSV lines.  ``--smoke`` runs the reduced
-CI lane — the static-vs-continuous serve comparison and the exchange pack
-A/B — and writes ``BENCH_serve.json`` / ``BENCH_exchange.json`` under
-``--json-dir``; the CI ``bench-smoke`` job uploads those as artifacts, so
-the perf trajectory is recorded per PR instead of living only in logs.
+CI lane — the static-vs-continuous serve comparison, the exchange pack
+A/B, and the planned-TPC-H sweep — and writes ``BENCH_serve.json`` /
+``BENCH_exchange.json`` / ``BENCH_tpch.json`` under ``--json-dir``; the CI
+``bench-smoke`` job uploads those as artifacts, so the perf trajectory is
+recorded per PR instead of living only in logs.
 The roofline section reads the dry-run artifacts (run
 ``python -m repro.launch.dryrun`` first).
 """
@@ -61,14 +62,17 @@ def roofline():
 
 
 def smoke(json_dir: str) -> None:
-    """The CI bench lane: serve + exchange records -> BENCH_*.json."""
+    """The CI bench lane: serve + exchange + tpch records -> BENCH_*.json."""
     os.makedirs(json_dir, exist_ok=True)
     print("# --- serve (smoke) ---")
     serve_rec = bench_serve.run(smoke=True)
     print("# --- fig12 (smoke) ---")
     exchange_rec = bench_exchange.run(smoke=True)
+    print("# --- tpch (smoke) ---")
+    tpch_rec = bench_tpch.run(smoke=True)
     for name, rec in (("BENCH_serve.json", serve_rec),
-                      ("BENCH_exchange.json", exchange_rec)):
+                      ("BENCH_exchange.json", exchange_rec),
+                      ("BENCH_tpch.json", tpch_rec)):
         path = os.path.join(json_dir, name)
         with open(path, "w") as f:
             json.dump(rec, f, indent=2, sort_keys=True)

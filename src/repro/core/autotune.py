@@ -291,6 +291,67 @@ def candidate_configs(
     return out
 
 
+def tune_config(
+    n: int,
+    table_stats: TableStats | Sequence[TableStats],
+    num_pods: int = 1,
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+    broadcast_stats: TableStats | None = None,
+) -> TunedConfig:
+    """Analytic argmin over multiplexer knobs for an ``n``-unit shuffle axis.
+
+    The mesh-free core of :func:`tune_multiplexer`: everything the cost
+    model needs is the shuffle-axis size, the pod count, and the exchange
+    shapes — so plan-time consumers (the query planner's ``explain()``,
+    which must run without any devices) can price a plan deterministically.
+    ``tune_multiplexer`` derives ``(n, num_pods)`` from a live mesh and
+    optionally adds empirical refinement on top of this.
+    """
+    stats = (
+        (table_stats,)
+        if isinstance(table_stats, TableStats)
+        else tuple(table_stats)
+    )
+    cross_pod = cross_pod_times = None
+    if num_pods > 1 and broadcast_stats is not None:
+        cross_pod_times = pod_strategy_times(
+            broadcast_stats, n, num_pods, chip, topology
+        )
+        cross_pod = min(cross_pod_times, key=cross_pod_times.get)
+    if n <= 1 or not stats or all(s.rows == 0 for s in stats):
+        return TunedConfig(
+            "round_robin", "xla", 1, 1, 0.0,
+            cross_pod=cross_pod, cross_pod_modeled_s=cross_pod_times,
+        )
+
+    scored = []
+    for impl, pack_impl, C, t in candidate_configs(n, stats):
+        total = sum(
+            exchange_makespan(
+                s, n, impl, pack_impl, C, t, chip, topology, num_pods
+            )
+            for s in stats
+        )
+        scored.append((total, C, t, impl, pack_impl))
+    # tie-break toward the simpler config (fewer chunks, scheduled transport)
+    scored.sort(key=lambda r: (r[0], r[1], r[2], r[3], r[4]))
+    candidates = tuple(
+        (impl, pack_impl, C, t, total) for total, C, t, impl, pack_impl in scored
+    )
+    total, C, t, impl, pack_impl = scored[0]
+    return TunedConfig(
+        impl=impl,
+        pack_impl=pack_impl,
+        pipeline_chunks=C,
+        transport_chunks=t,
+        modeled_s=total,
+        candidates=candidates,
+        cross_pod=cross_pod,
+        cross_pod_modeled_s=cross_pod_times,
+    )
+
+
 def tune_multiplexer(
     mesh,
     table_stats: TableStats | Sequence[TableStats],
@@ -328,34 +389,10 @@ def tune_multiplexer(
     else:
         n = int(mesh.devices.shape[list(mesh.axis_names).index(axis)])
         num_pods = _shuffle_axis(mesh)[2]
-    cross_pod = cross_pod_times = None
-    if num_pods > 1 and broadcast_stats is not None:
-        cross_pod_times = pod_strategy_times(
-            broadcast_stats, n, num_pods, chip, topology
-        )
-        cross_pod = min(cross_pod_times, key=cross_pod_times.get)
-    if axis is None or n <= 1 or not stats or all(s.rows == 0 for s in stats):
-        return TunedConfig(
-            "round_robin", "xla", 1, 1, 0.0,
-            cross_pod=cross_pod, cross_pod_modeled_s=cross_pod_times,
-        )
-
-    scored = []
-    for impl, pack_impl, C, t in candidate_configs(n, stats):
-        total = sum(
-            exchange_makespan(
-                s, n, impl, pack_impl, C, t, chip, topology, num_pods
-            )
-            for s in stats
-        )
-        scored.append((total, C, t, impl, pack_impl))
-    # tie-break toward the simpler config (fewer chunks, scheduled transport)
-    scored.sort(key=lambda r: (r[0], r[1], r[2], r[3], r[4]))
-    candidates = tuple(
-        (impl, pack_impl, C, t, total) for total, C, t, impl, pack_impl in scored
+    tuned = tune_config(
+        n if axis is not None else 1, stats, num_pods=num_pods, chip=chip,
+        topology=topology, broadcast_stats=broadcast_stats,
     )
-    best = scored[0]
-    measured = None
     if refine and num_pods > 1:
         # measure_shuffle_config runs the single-level in-pod shuffle; on a
         # two-level mesh that measures neither the DCI hop nor the P-fold
@@ -370,28 +407,30 @@ def tune_multiplexer(
             stacklevel=2,
         )
         refine = False
-    if refine and len(scored) > 1:
-        probe = max(stats, key=lambda s: s.rows * s.row_bytes)
-        timed = []
-        for total, C, t, impl, pack_impl in scored[:refine_top_k]:
-            wall = measure_shuffle_config(
-                mesh, axis, probe, impl=impl, pack_impl=pack_impl,
-                pipeline_chunks=C, transport_chunks=t,
-            )
-            timed.append((wall, (total, C, t, impl, pack_impl)))
-        timed.sort(key=lambda r: r[0])
-        measured, best = timed[0]
-    total, C, t, impl, pack_impl = best
-    return TunedConfig(
+    scored = [
+        (total, C, t, impl, pack_impl)
+        for impl, pack_impl, C, t, total in tuned.candidates
+    ]
+    if not refine or len(scored) <= 1:
+        return tuned
+    probe = max(stats, key=lambda s: s.rows * s.row_bytes)
+    timed = []
+    for total, C, t, impl, pack_impl in scored[:refine_top_k]:
+        wall = measure_shuffle_config(
+            mesh, axis, probe, impl=impl, pack_impl=pack_impl,
+            pipeline_chunks=C, transport_chunks=t,
+        )
+        timed.append((wall, (total, C, t, impl, pack_impl)))
+    timed.sort(key=lambda r: r[0])
+    measured, (total, C, t, impl, pack_impl) = timed[0]
+    return dataclasses.replace(
+        tuned,
         impl=impl,
         pack_impl=pack_impl,
         pipeline_chunks=C,
         transport_chunks=t,
         modeled_s=total,
         measured_s=measured,
-        candidates=candidates,
-        cross_pod=cross_pod,
-        cross_pod_modeled_s=cross_pod_times,
     )
 
 
@@ -564,6 +603,7 @@ __all__ = [
     "exchange_makespan",
     "pod_strategy_times",
     "candidate_configs",
+    "tune_config",
     "tune_multiplexer",
     "measure_shuffle_config",
     "calibrate_chip",

@@ -28,6 +28,8 @@ CARD = {
 RETURNFLAGS = ["A", "N", "R"]
 LINESTATUS = ["F", "O"]
 MKTSEGMENTS = ["AUTOMOBILE", "BUILDING", "FURNITURE", "HOUSEHOLD", "MACHINERY"]
+ORDERPRIORITIES = ["1-URGENT", "2-HIGH", "3-MEDIUM", "4-NOT SPECIFIED", "5-LOW"]
+SHIPMODES = ["REG AIR", "AIR", "RAIL", "SHIP", "TRUCK", "MAIL", "FOB"]
 BRANDS = [f"Brand#{i}{j}" for i in range(1, 6) for j in range(1, 6)]
 CONTAINERS = [
     f"{s} {t}"
@@ -37,6 +39,22 @@ CONTAINERS = [
 
 DATE_MIN_DAYS = 0  # 1992-01-01
 DATE_MAX_DAYS = 2526  # ~1998-12-01
+
+# Minimum row counts at tiny scale factors (keeps every table shardable).
+FLOORS = {
+    "part": 64,
+    "customer": 64,
+    "orders": 256,
+    "lineitem": 1024,
+}
+
+
+def table_capacity(name: str, sf: float) -> int:
+    """Row count of table ``name`` at scale factor ``sf`` — THE shared
+    definition: the ``gen_*`` functions size their tables with this and the
+    planner's ``tpch.tpch_catalog`` plans against it, so golden plan
+    snapshots can never drift from generated-table capacities."""
+    return max(int(CARD[name] * sf), FLOORS[name])
 
 
 def date_to_days(y: int, m: int, d: int) -> int:
@@ -57,7 +75,7 @@ def _zipf_ranks(rng, n: int, domain: int, z: float) -> np.ndarray:
 
 def gen_part(sf: float, seed: int = 1) -> Table:
     rng = np.random.default_rng(seed)
-    n = max(int(CARD["part"] * sf), 64)
+    n = table_capacity("part", sf)
     return from_numpy(
         {
             "p_partkey": np.arange(n, dtype=np.int32),
@@ -74,7 +92,7 @@ def gen_part(sf: float, seed: int = 1) -> Table:
 
 def gen_customer(sf: float, seed: int = 2) -> Table:
     rng = np.random.default_rng(seed)
-    n = max(int(CARD["customer"] * sf), 64)
+    n = table_capacity("customer", sf)
     return from_numpy(
         {
             "c_custkey": np.arange(n, dtype=np.int32),
@@ -86,17 +104,31 @@ def gen_customer(sf: float, seed: int = 2) -> Table:
 
 def gen_orders(sf: float, seed: int = 3) -> Table:
     rng = np.random.default_rng(seed)
-    n = max(int(CARD["orders"] * sf), 256)
-    ncust = max(int(CARD["customer"] * sf), 64)
+    n = table_capacity("orders", sf)
+    ncust = table_capacity("customer", sf)
+    # draw order matters: new columns draw AFTER the originals so existing
+    # columns stay bit-identical across the schema extension
+    custkey = rng.integers(0, ncust, n).astype(np.int32)
+    orderdate = rng.integers(DATE_MIN_DAYS, DATE_MAX_DAYS - 151, n).astype(
+        np.int32
+    )
+    priority = rng.integers(0, len(ORDERPRIORITIES), n).astype(np.int32)
+    # cents; dbgen's o_totalprice is the sum of the order's lines — a wide
+    # uniform stands in.  Deliberately capped at 5.5M cents ($55k), below
+    # the f32 integer-exact range (2^23): Q18's top-k sorts this column
+    # through an f32 key, and values beyond 2^23 would round and reorder
+    # ties differently from the int-exact numpy oracle.
+    totalprice = rng.integers(90_000, 55_000_00, n).astype(np.int32)
     return from_numpy(
         {
             "o_orderkey": np.arange(n, dtype=np.int32),
-            "o_custkey": rng.integers(0, ncust, n).astype(np.int32),
-            "o_orderdate": rng.integers(
-                DATE_MIN_DAYS, DATE_MAX_DAYS - 151, n
-            ).astype(np.int32),
+            "o_custkey": custkey,
+            "o_orderdate": orderdate,
             "o_shippriority": np.zeros(n, np.int32),
-        }
+            "o_orderpriority": priority,
+            "o_totalprice": totalprice,
+        },
+        dictionaries={"o_orderpriority": ORDERPRIORITIES},
     )
 
 
@@ -104,9 +136,9 @@ def gen_lineitem(
     sf: float, seed: int = 4, zipf_partkey: float | None = None
 ) -> Table:
     rng = np.random.default_rng(seed)
-    n = max(int(CARD["lineitem"] * sf), 1024)
-    norder = max(int(CARD["orders"] * sf), 256)
-    npart = max(int(CARD["part"] * sf), 64)
+    n = table_capacity("lineitem", sf)
+    norder = table_capacity("orders", sf)
+    npart = table_capacity("part", sf)
     if zipf_partkey:
         partkey = _zipf_ranks(rng, n, npart, zipf_partkey).astype(np.int32)
     else:
@@ -117,19 +149,40 @@ def gen_lineitem(
     price = (qty.astype(np.int32) * (90000 + (partkey.astype(np.int32) % 2000) * 100))
     orderdate = rng.integers(DATE_MIN_DAYS, DATE_MAX_DAYS - 151, n)
     shipdate = (orderdate + rng.integers(1, 122, n)).astype(np.int32)
+    # draw order matters: keep the original columns' draws in their original
+    # sequence (dict order below) and append the Q4/Q12 columns' draws after,
+    # so pre-existing columns stay bit-identical across the schema extension
+    orderkey = rng.integers(0, norder, n).astype(np.int32)
+    discount = rng.integers(0, 11, n).astype(np.int32)  # percent
+    tax = rng.integers(0, 9, n).astype(np.int32)  # percent
+    returnflag = rng.integers(0, len(RETURNFLAGS), n).astype(np.int32)
+    linestatus = rng.integers(0, len(LINESTATUS), n).astype(np.int32)
+    # dbgen-like: commit ~ order + [30, 90); receipt ~ ship + [1, 30) — so
+    # l_shipdate < l_commitdate (Q12) and l_commitdate < l_receiptdate (Q4)
+    # each hold for a nontrivial fraction of rows
+    commitdate = (orderdate + rng.integers(30, 91, n)).astype(np.int32)
+    receiptdate = (shipdate + rng.integers(1, 31, n)).astype(np.int32)
+    shipmode = rng.integers(0, len(SHIPMODES), n).astype(np.int32)
     return from_numpy(
         {
-            "l_orderkey": rng.integers(0, norder, n).astype(np.int32),
+            "l_orderkey": orderkey,
             "l_partkey": partkey,
             "l_quantity": qty,
             "l_extendedprice": price,
-            "l_discount": rng.integers(0, 11, n).astype(np.int32),  # percent
-            "l_tax": rng.integers(0, 9, n).astype(np.int32),  # percent
-            "l_returnflag": rng.integers(0, len(RETURNFLAGS), n).astype(np.int32),
-            "l_linestatus": rng.integers(0, len(LINESTATUS), n).astype(np.int32),
+            "l_discount": discount,
+            "l_tax": tax,
+            "l_returnflag": returnflag,
+            "l_linestatus": linestatus,
             "l_shipdate": shipdate,
+            "l_commitdate": commitdate,
+            "l_receiptdate": receiptdate,
+            "l_shipmode": shipmode,
         },
-        dictionaries={"l_returnflag": RETURNFLAGS, "l_linestatus": LINESTATUS},
+        dictionaries={
+            "l_returnflag": RETURNFLAGS,
+            "l_linestatus": LINESTATUS,
+            "l_shipmode": SHIPMODES,
+        },
     )
 
 
@@ -144,9 +197,13 @@ def gen_all(sf: float, seed: int = 0, zipf_partkey: float | None = None):
 
 __all__ = [
     "CARD",
+    "FLOORS",
+    "table_capacity",
     "RETURNFLAGS",
     "LINESTATUS",
     "MKTSEGMENTS",
+    "ORDERPRIORITIES",
+    "SHIPMODES",
     "BRANDS",
     "CONTAINERS",
     "date_to_days",

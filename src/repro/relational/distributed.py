@@ -1,245 +1,62 @@
-"""The distributed query engine: decoupled exchange plans over shard_map.
+"""Distributed TPC-H entry points — thin wrappers over the query planner.
 
-This is the paper's §3.2 pipeline end-to-end: local morsel pipelines
-(queries.py) composed with the decoupled exchange operators
-(core.exchange) under ``shard_map`` — partition shuffles for joins on the
-shuffle key, broadcast exchanges for small build sides (planner rule
-``plan.choose_join_strategy``), pre-aggregation before the exchange where
-the group domain is small (Q1), and a final psum/top-k combine.
+Every query here is a *logical plan* (``planner/tpch.py``); the cost-based
+physical planner (``planner/physical.py``) places the exchanges — broadcast
+vs partition per the paper's hybrid threshold (§3.1, Fig 6), pre-aggregation
+for dense group-bys, co-partitioning reuse across chained joins — and the
+executor (``planner/executor.py``) compiles the result into one shard_map
+over the communication multiplexer.  The hand-wired per-query shard_map
+plumbing that used to live here is gone; adding a query is now ~20 lines of
+IR, and the planner's decisions are inspectable via
+``planner.tpch.explain_query`` (golden-snapshotted under
+``tests/golden_plans/``).
 
-Tables cross the shard_map boundary as (columns-dict, valid) pytrees; the
-exchange ships a densely packed int32 row matrix (paper Fig 8's fixed-width
-serialization — column pruning happens before the pack).
+The execution contract is unchanged from the hand-written era and the
+equivalence suites still hold these entry points to it:
 
-All exchanges are routed through a :class:`repro.core.multiplexer
-.CommMultiplexer` built once per query ("decoupled": the query plans never
-pick transports themselves).  By default (``impl="auto"``) every
-multiplexer knob — transport, ``pack_impl``, ``pipeline_chunks``,
-``transport_chunks``, and on pod meshes the ``cross_pod`` build-side
-strategy — is derived from the topology cost model by
-:func:`repro.core.autotune.tune_multiplexer`, fed the per-shard row counts
-and packed row widths of the query's own exchanges.  Passing an explicit
-``impl`` (plus optional ``pack_impl`` / ``num_chunks`` / ``cross_pod``)
-bypasses the tuner — that is what the A/B benchmarks and equivalence tests
-do — and passing only ``pack_impl`` / ``num_chunks`` / ``cross_pod`` under
-``impl="auto"`` pins just those knobs while the tuner picks the rest.
-Every partition exchange's capacity is the static zero-drop bound, and the
-psum'd drop count of each exchange is checked after execution — capacity
-overflow raises instead of silently losing rows.
-
-Two-level meshes (``num_pods > 1``, the paper's network in the large): rows
-are sharded over ``("pod", "q")``; every partition exchange becomes the
-two-level shuffle (coarse cross-pod hop, then fine in-pod — fine-grained
-traffic never crosses DCI), build sides either replicate across pods or
-reshard by key per the tuned ``cross_pod`` strategy, and the final
-psum/top-k combine crosses the pod axis coarsely.  Results are identical
-to the single-pod plan (the multi-device and multi-process suites assert
-it).  Works both single-process (fake pods) and under
-``repro.launch.cluster`` with one pod per real process.
+* every exchange runs through ONE per-query auto-tuned
+  :class:`~repro.core.multiplexer.CommMultiplexer` (``impl="auto"``;
+  explicit ``impl``/``pack_impl``/``num_chunks``/``cross_pod`` pin knobs
+  for A/B tests);
+* capacities are the static zero-drop bound and any exchange overflow
+  raises instead of silently losing rows;
+* ``num_pods > 1`` runs the two-level ``(pod, q)`` mesh: shuffles take the
+  coarse-cross-pod + fine-in-pod route, build sides follow the tuned
+  ``cross_pod`` strategy, and results equal the single-pod plan exactly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-
-import jax
-import jax.numpy as jnp
-from jax import lax
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import fetch, make_mesh, shard_map
-from repro.core.autotune import TableStats
-from repro.core.multiplexer import CommMultiplexer, make_multiplexer
-from . import operators as ops
-from . import queries as Q
-from .plan import PlannerConfig, choose_join_strategy
-from .table import Table, pad_to, shard_rows
-
-
-def _mesh(num_shards: int, num_pods: int = 1):
-    """Query mesh: 1-D single-pod, or two-level ``(pod, q)`` with the fine
-    shuffle axis strictly in-pod (``num_pods`` defaults to 1 even in a
-    multi-process run — pass it explicitly to engage the two-level plan)."""
-    if num_pods <= 1:
-        return make_mesh((num_shards,), ("q",))
-    if num_shards % num_pods:
-        raise ValueError(
-            f"num_shards={num_shards} does not split across "
-            f"num_pods={num_pods}; pick a pod count dividing the shard count"
-        )
-    return make_mesh((num_pods, num_shards // num_pods), ("pod", "q"))
-
-
-def _axes(num_pods: int):
-    """The mesh axes a table's rows are sharded over (shard_map specs and
-    the final cross-unit psum both use this)."""
-    return ("pod", "q") if num_pods > 1 else ("q",)
-
-
-def _make_mux(
-    mesh, impl: str, pack_impl: str | None = None, num_chunks: int | None = None,
-    stats: list[TableStats] | None = None,
-    broadcast_stats: TableStats | None = None,
-    cross_pod: str | None = None,
-) -> CommMultiplexer:
-    """One multiplexer per query.
-
-    ``impl="auto"`` hands the knobs to the topology autotuner, fed ``stats``
-    (one entry per exchange in the plan) and ``broadcast_stats`` (the build
-    side of a broadcast-style join, so the tuner can pick the cross-pod
-    strategy on two-level meshes); an explicitly passed ``pack_impl`` /
-    ``num_chunks`` / ``cross_pod`` (non-``None``) pins that knob even under
-    auto.  An explicit ``impl`` uses the caller's knobs verbatim, with the
-    pre-tuner defaults (``"xla"`` pack, unchunked, cross-pod broadcast) for
-    anything left unset."""
-    if impl == "auto":
-        mux = make_multiplexer(
-            mesh, auto=True, table_stats=stats or (),
-            broadcast_stats=broadcast_stats,
-        )
-        pins = {}
-        if pack_impl is not None:
-            pins["pack_impl"] = pack_impl
-        if num_chunks is not None:
-            pins["pipeline_chunks"] = num_chunks
-        if cross_pod is not None:
-            pins["cross_pod"] = cross_pod
-        return dataclasses.replace(mux, **pins) if pins else mux
-    return make_multiplexer(
-        mesh, impl=impl, pack_impl=pack_impl or "xla",
-        pipeline_chunks=num_chunks or 1, cross_pod=cross_pod or "broadcast",
-    )
-
-
-def _exchange_stats(prepped: Table, num_shards: int, num_cols: int) -> TableStats:
-    """Cost-model view of one exchange: per-shard rows x packed row bytes."""
-    return TableStats(
-        rows=prepped.capacity // num_shards, row_bytes=4 * num_cols
-    )
-
-
-def _prep(table: Table, num_shards: int) -> Table:
-    cap = math.ceil(table.capacity / num_shards) * num_shards
-    return shard_rows(pad_to(table, cap), num_shards)
-
-
-def _local(table: Table):
-    """Split a Table into shard_map-compatible pytrees."""
-    return table.columns, table.valid
-
-
-def _exchange_by_key(
-    mux: CommMultiplexer, tbl_cols: dict, tbl_valid, key_name: str,
-    columns: list[str], axis: str,
-) -> tuple[Table, jax.Array]:
-    """Decoupled exchange: repartition rows by hash(key) over the mesh.
-
-    Routed through :meth:`CommMultiplexer.hash_shuffle_global`: on a
-    single-level mesh that is the plain in-axis shuffle; on a two-level mesh
-    it is the coarse-cross-pod + fine-in-pod exchange (``axis`` is the
-    in-pod axis — the pod hop is the multiplexer's, never the caller's).
-    Capacity per (src, dst) message equals the local capacity — the static
-    zero-drop bound (a destination can at most receive every row of every
-    sender).  Column pruning (paper §3.2.1) happens via ``columns``.
-
-    Returns ``(table, dropped)`` where ``dropped`` is the psum'd number of
-    rows lost to capacity overflow (0 under the zero-drop bound; surfaced so
-    callers can turn overflow into an error instead of silent row loss).
-    """
-    cap = tbl_valid.shape[0]
-    rows = jnp.stack([tbl_cols[c].astype(jnp.int32) for c in columns], axis=1)
-    out_rows, out_valid, dropped = mux.hash_shuffle_global(
-        tbl_cols[key_name].astype(jnp.int32), rows, axis,
-        capacity=cap, valid=tbl_valid,
-    )
-    cols = {c: out_rows[:, i] for i, c in enumerate(columns)}
-    return Table(cols, out_valid), dropped
-
-
-def _broadcast_table(
-    mux: CommMultiplexer, tbl_cols: dict, tbl_valid, columns: list[str],
-    axis: str, key_name: str | None = None,
-) -> tuple[Table, jax.Array]:
-    """Deliver a join's (small) build side to where the probe rows are.
-
-    Single-level mesh: ring all-gather — every device gets every row.  On a
-    two-level mesh the multiplexer's tuned ``cross_pod`` strategy decides:
-
-    * ``"broadcast"`` — replicate everywhere (in-pod all-gather, then one
-      coarse cross-pod all-gather).  The paper's broadcast join: the build
-      side crosses DCI once per remote pod.
-    * ``"reshard"`` — hash-exchange the build side by ``key_name`` exactly
-      like the probe side; equal keys land on the same device, so the local
-      join sees only its partition.  Wins once the build side outgrows the
-      broadcast threshold.
-
-    Returns ``(table, dropped)`` (broadcast never drops; reshard is under
-    the zero-drop bound, surfaced for the caller's overflow check).
-    """
-    if mux.plan.pod_axis is not None and mux.cross_pod == "reshard":
-        assert key_name is not None, "reshard needs the build-side join key"
-        return _exchange_by_key(mux, tbl_cols, tbl_valid, key_name, columns, axis)
-    cols = {}
-    for c in columns:
-        g = mux.broadcast_global(tbl_cols[c], axis)
-        cols[c] = g.reshape(-1)
-    v = mux.broadcast_global(tbl_valid, axis).reshape(-1)
-    return Table(cols, v), jnp.int32(0)
-
-
-def _raise_on_dropped(query: str, dropped) -> None:
-    """Capacity overflow is an error, not silent row loss (paper: the message
-    pool is sized so overflow cannot happen; if it does, results are wrong)."""
-    d = int(fetch(dropped))
-    if d:
-        raise RuntimeError(
-            f"{query}: exchange dropped {d} rows to capacity overflow — "
-            "results would silently lose rows; raise the capacity bound"
-        )
+from .planner import tpch
+from .planner.tpch import run_query as _run
+from .table import Table
 
 
 # ----------------------------------------------------------------------------
-# Q1 — pure pre-aggregation plan: no row exchange at all (paper Fig 11: Q1
-# transfers almost nothing).  Local dense group-by, psum of the group table.
+# Q1/Q6 — pure pre-aggregation plans: no row exchange at all (paper Fig 11).
 # ----------------------------------------------------------------------------
 
 def q1_distributed(
     lineitem: Table, num_shards: int, delta_days: int = 90, num_pods: int = 1
 ):
-    li = _prep(lineitem, num_shards)
-    axes = _axes(num_pods)
-
-    def body(cols, valid):
-        partial_ = Q.q1_local(Table(cols, valid), delta_days)
-        return jax.tree.map(lambda x: lax.psum(x, axes), partial_)
-
-    fn = shard_map(
-        body, mesh=_mesh(num_shards, num_pods),
-        in_specs=(P(axes), P(axes)), out_specs=P(),
+    return _run(
+        tpch.q1(delta_days), {"lineitem": lineitem}, num_shards,
+        num_pods=num_pods,
     )
-    return Q.q1_finalize(fetch(jax.jit(fn)(*_local(li))))
 
 
 def q6_distributed(
     lineitem: Table, num_shards: int, year: int = 1994, num_pods: int = 1
 ):
-    li = _prep(lineitem, num_shards)
-    axes = _axes(num_pods)
-
-    def body(cols, valid):
-        return lax.psum(Q.q6_local(Table(cols, valid), year), axes)
-
-    fn = shard_map(
-        body, mesh=_mesh(num_shards, num_pods),
-        in_specs=(P(axes), P(axes)), out_specs=P(),
+    return _run(
+        tpch.q6(year), {"lineitem": lineitem}, num_shards, num_pods=num_pods
     )
-    return fetch(jax.jit(fn)(*_local(li)))
 
 
 # ----------------------------------------------------------------------------
-# Q17 — the paper's worked example (Fig 6): partition lineitem by l_partkey,
-# broadcast the (filtered, tiny) part side, local correlated-AVG plan, psum.
+# Q17 — the paper's worked example (Fig 6): the planner broadcasts the
+# (filtered, tiny) part side and shares one lineitem shuffle between the
+# correlated-AVG group-by and the join back.
 # ----------------------------------------------------------------------------
 
 def q17_distributed(
@@ -254,47 +71,17 @@ def q17_distributed(
     num_pods: int = 1,
     cross_pod: str | None = None,
 ):
-    li = _prep(lineitem, num_shards)
-    pt = _prep(part, num_shards)
-    mesh = _mesh(num_shards, num_pods)
-    axes = _axes(num_pods)
-    mux = _make_mux(mesh, impl, pack_impl, num_chunks,
-                    stats=[_exchange_stats(li, num_shards, 3)],
-                    broadcast_stats=_exchange_stats(pt, num_shards, 3),
-                    cross_pod=cross_pod)
-    planner = PlannerConfig(num_units=num_shards, hybrid=True)
-    strategy = choose_join_strategy(
-        small_rows=part.capacity, large_rows=lineitem.capacity, cfg=planner
+    return _run(
+        tpch.q17(brand, container), {"lineitem": lineitem, "part": part},
+        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
+        num_chunks=num_chunks, cross_pod=cross_pod,
     )
-
-    def body(li_cols, li_valid, pt_cols, pt_valid):
-        li_t, dropped = _exchange_by_key(
-            mux, li_cols, li_valid, "l_partkey",
-            ["l_partkey", "l_quantity", "l_extendedprice"], "q",
-        )
-        assert strategy == "broadcast", strategy  # part is ~30x smaller
-        pt_t, drop_pt = _broadcast_table(
-            mux, pt_cols, pt_valid, ["p_partkey", "p_brand", "p_container"],
-            "q", key_name="p_partkey",
-        )
-        partial_ = Q.q17_local(li_t, pt_t, brand, container)
-        return lax.psum(partial_, axes), dropped + drop_pt
-
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axes),) * 4, out_specs=(P(), P()),
-        # the replication checker has no rule for pallas_call (the fused
-        # pack kernel) nor for the two-level ppermute hierarchy; keep it on
-        # for the single-pod xla pack path only
-        check_vma=mux.pack_impl != "pallas" and num_pods == 1,
-    )
-    result, dropped = jax.jit(fn)(*_local(li), *_local(pt))
-    _raise_on_dropped("q17", dropped)
-    return fetch(result)
 
 
 # ----------------------------------------------------------------------------
-# Q3 — two partition exchanges (custkey, then orderkey) + distributed top-k.
+# Q3 — 3-table join + distributed top-10.  The hybrid threshold broadcasts
+# the customer side (10x smaller than orders); lineitem and the surviving
+# order keys co-partition on orderkey.
 # ----------------------------------------------------------------------------
 
 def q3_distributed(
@@ -307,149 +94,132 @@ def q3_distributed(
     pack_impl: str | None = None,
     num_chunks: int | None = None,
     num_pods: int = 1,
+    cross_pod: str | None = None,
 ):
-    cu = _prep(customer, num_shards)
-    od = _prep(orders, num_shards)
-    li = _prep(lineitem, num_shards)
-    mesh = _mesh(num_shards, num_pods)
-    axes = _axes(num_pods)
-    mux = _make_mux(mesh, impl, pack_impl, num_chunks, stats=[
-        _exchange_stats(cu, num_shards, 2),   # customer by c_custkey
-        _exchange_stats(od, num_shards, 3),   # orders by o_custkey
-        _exchange_stats(od, num_shards, 2),   # joined orders by o_orderkey
-        _exchange_stats(li, num_shards, 4),   # lineitem by l_orderkey
-    ])
-    from .datagen import date_to_days
-
-    cutoff = date_to_days(1995, 3, 15)
-
-    def body(cu_cols, cu_valid, od_cols, od_valid, li_cols, li_valid):
-        # stage 1: co-partition customer and orders on custkey
-        cu_t, drop0 = _exchange_by_key(
-            mux, cu_cols, cu_valid, "c_custkey", ["c_custkey", "c_mktsegment"], "q"
-        )
-        od_t, drop1 = _exchange_by_key(
-            mux, od_cols, od_valid, "o_custkey",
-            ["o_custkey", "o_orderkey", "o_orderdate"], "q",
-        )
-        fcust = cu_t.with_mask(cu_t["c_mktsegment"] == segment)
-        ford = od_t.with_mask(od_t["o_orderdate"] < cutoff)
-        cidx, cmatch = ops.join_pk(
-            fcust["c_custkey"], fcust.valid, ford["o_custkey"], ford.valid
-        )
-        od_j = ford.with_mask(cmatch)
-
-        # stage 2: co-partition joined orders and lineitem on orderkey
-        od_t2, drop2 = _exchange_by_key(
-            mux, od_j.columns, od_j.valid, "o_orderkey",
-            ["o_orderkey", "o_orderdate"], "q",
-        )
-        li_t, drop3 = _exchange_by_key(
-            mux, li_cols, li_valid, "l_orderkey",
-            ["l_orderkey", "l_shipdate", "l_extendedprice", "l_discount"], "q",
-        )
-        flin = li_t.with_mask(li_t["l_shipdate"] > cutoff)
-        oidx, omatch = ops.join_pk(
-            od_t2["o_orderkey"], od_t2.valid, flin["l_orderkey"], flin.valid
-        )
-        revenue = ops.money_times_pct(
-            flin["l_extendedprice"], 100 - flin["l_discount"]
-        )
-        gkeys, gvalid, aggs = ops.groupby_sorted(
-            flin["l_orderkey"], omatch, {"revenue": (revenue, "sum")}
-        )
-        # local top-10, then broadcast-combine for the global top-10
-        vals, payload = ops.topk_rows(
-            aggs["revenue"], gvalid, 10,
-            {"o_orderkey": gkeys, "revenue": aggs["revenue"]},
-        )
-        all_vals = mux.broadcast_global(vals, "q").reshape(-1)
-        all_keys = mux.broadcast_global(payload["o_orderkey"], "q").reshape(-1)
-        all_rev = mux.broadcast_global(payload["revenue"], "q").reshape(-1)
-        top_vals, idx = lax.top_k(all_vals, 10)
-        result = {"o_orderkey": all_keys[idx], "revenue": all_rev[idx]}
-        return result, drop0 + drop1 + drop2 + drop3
-
-    fn = shard_map(
-        body, mesh=mesh,
-        in_specs=(P(axes),) * 6, out_specs=(P(), P()),
-        # the top-k combine is replicated by construction (same ring
-        # all-gather on every shard) but VMA can't infer that through
-        # ppermute — disable the check rather than force an extra psum
-        check_vma=False,
+    return _run(
+        tpch.q3(segment),
+        {"customer": customer, "orders": orders, "lineitem": lineitem},
+        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
+        num_chunks=num_chunks, cross_pod=cross_pod,
     )
-    result, dropped = jax.jit(fn)(*_local(cu), *_local(od), *_local(li))
-    _raise_on_dropped("q3", dropped)
-    return fetch(result)
 
 
-def _partkey_join_plan(query_fn, part_cols_needed):
-    """Shared plan for Q14/Q19: partition lineitem by l_partkey, broadcast
-    the (much smaller) part side — the hybrid planner's broadcast rule."""
+# ----------------------------------------------------------------------------
+# Q14/Q19 — broadcast-part joins; the planner drops the lineitem shuffle the
+# old hand-written plan paid for nothing (no group-by needs co-partitioning).
+# ----------------------------------------------------------------------------
 
-    def run(lineitem: Table, part: Table, num_shards: int, impl: str = "auto",
-            pack_impl: str | None = None, num_chunks: int | None = None,
-            num_pods: int = 1, cross_pod: str | None = None, **kw):
-        li = _prep(lineitem, num_shards)
-        pt = _prep(part, num_shards)
-        mesh = _mesh(num_shards, num_pods)
-        axes = _axes(num_pods)
-        mux = _make_mux(mesh, impl, pack_impl, num_chunks,
-                        stats=[_exchange_stats(li, num_shards, 5)],
-                        broadcast_stats=_exchange_stats(
-                            pt, num_shards, len(part_cols_needed)
-                        ),
-                        cross_pod=cross_pod)
-
-        def body(li_cols, li_valid, pt_cols, pt_valid):
-            li_t, dropped = _exchange_by_key(
-                mux, li_cols, li_valid, "l_partkey",
-                ["l_partkey", "l_quantity", "l_extendedprice", "l_discount",
-                 "l_shipdate"], "q",
-            )
-            pt_t, drop_pt = _broadcast_table(
-                mux, pt_cols, pt_valid, part_cols_needed, "q",
-                key_name="p_partkey",
-            )
-            return jax.tree.map(
-                lambda v: lax.psum(v, axes), query_fn(li_t, pt_t, **kw)
-            ), dropped + drop_pt
-
-        fn = shard_map(
-            body, mesh=mesh,
-            in_specs=(P(axes),) * 4, out_specs=(P(), P()),
-            # see q17: no replication rule for pallas_call / two-level hops
-            check_vma=mux.pack_impl != "pallas" and num_pods == 1,
-        )
-        result, dropped = jax.jit(fn)(*_local(li), *_local(pt))
-        _raise_on_dropped(getattr(query_fn, "__name__", "partkey_join"), dropped)
-        return fetch(result)
-
-    return run
-
-
-def q14_distributed(lineitem, part, num_shards, impl="auto", **kw):
-    run = _partkey_join_plan(
-        lambda li, pt, **k: Q.q14_local(li, pt, **k),
-        ["p_partkey", "p_brand"],
+def q14_distributed(
+    lineitem: Table,
+    part: Table,
+    num_shards: int,
+    impl: str = "auto",
+    year: int = 1995,
+    month: int = 9,
+    promo_brands: int = 5,
+    pack_impl: str | None = None,
+    num_chunks: int | None = None,
+    num_pods: int = 1,
+    cross_pod: str | None = None,
+):
+    return _run(
+        tpch.q14(year, month, promo_brands),
+        {"lineitem": lineitem, "part": part},
+        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
+        num_chunks=num_chunks, cross_pod=cross_pod,
     )
-    promo, total = run(lineitem, part, num_shards, impl, **kw)
-    return Q.q14_finalize(promo, total)
 
 
-def q19_distributed(lineitem, part, num_shards, impl="auto", **kw):
-    run = _partkey_join_plan(
-        lambda li, pt, **k: Q.q19_local(li, pt, **k),
-        ["p_partkey", "p_brand", "p_container", "p_size"],
+def q19_distributed(
+    lineitem: Table,
+    part: Table,
+    num_shards: int,
+    impl: str = "auto",
+    terms=None,
+    pack_impl: str | None = None,
+    num_chunks: int | None = None,
+    num_pods: int = 1,
+    cross_pod: str | None = None,
+):
+    return _run(
+        tpch.q19(terms), {"lineitem": lineitem, "part": part},
+        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
+        num_chunks=num_chunks, cross_pod=cross_pod,
     )
-    return run(lineitem, part, num_shards, impl, **kw)
+
+
+# ----------------------------------------------------------------------------
+# Q4/Q12/Q18 — plan-only queries: these never had a hand-written distributed
+# version; the logical plan in planner/tpch.py IS the implementation.
+# ----------------------------------------------------------------------------
+
+def q4_distributed(
+    lineitem: Table,
+    orders: Table,
+    num_shards: int,
+    year: int = 1993,
+    month: int = 7,
+    impl: str = "auto",
+    pack_impl: str | None = None,
+    num_chunks: int | None = None,
+    num_pods: int = 1,
+    cross_pod: str | None = None,
+):
+    return _run(
+        tpch.q4(year, month), {"lineitem": lineitem, "orders": orders},
+        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
+        num_chunks=num_chunks, cross_pod=cross_pod,
+    )
+
+
+def q12_distributed(
+    lineitem: Table,
+    orders: Table,
+    num_shards: int,
+    year: int = 1994,
+    modes: tuple[int, int] = (5, 3),
+    impl: str = "auto",
+    pack_impl: str | None = None,
+    num_chunks: int | None = None,
+    num_pods: int = 1,
+    cross_pod: str | None = None,
+):
+    return _run(
+        tpch.q12(year, modes), {"lineitem": lineitem, "orders": orders},
+        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
+        num_chunks=num_chunks, cross_pod=cross_pod,
+    )
+
+
+def q18_distributed(
+    lineitem: Table,
+    orders: Table,
+    customer: Table,
+    num_shards: int,
+    threshold: int = 300,
+    k: int = 100,
+    impl: str = "auto",
+    pack_impl: str | None = None,
+    num_chunks: int | None = None,
+    num_pods: int = 1,
+    cross_pod: str | None = None,
+):
+    return _run(
+        tpch.q18(threshold, k),
+        {"lineitem": lineitem, "orders": orders, "customer": customer},
+        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
+        num_chunks=num_chunks, cross_pod=cross_pod,
+    )
 
 
 __all__ = [
     "q1_distributed",
-    "q6_distributed",
-    "q17_distributed",
     "q3_distributed",
+    "q4_distributed",
+    "q6_distributed",
+    "q12_distributed",
     "q14_distributed",
+    "q17_distributed",
+    "q18_distributed",
     "q19_distributed",
 ]

@@ -143,6 +143,117 @@ def q14_oracle(lineitem: Table, part: Table, year: int = 1995, month: int = 9,
     return 100.0 * promo / max(total, 1e-9)
 
 
+def q4_oracle(
+    lineitem: Table, orders: Table, year: int = 1993, month: int = 7
+) -> np.ndarray:
+    """Order-priority counts over orders with >= 1 late lineitem (EXISTS)."""
+    from .datagen import ORDERPRIORITIES
+
+    lt, ot = _np(lineitem), _np(orders)
+    lo = date_to_days(year, month, 1)
+    m2, y2 = (month + 3, year) if month + 3 <= 12 else (month - 9, year + 1)
+    hi = date_to_days(y2, m2, 1)
+    late = set()
+    for i in range(lt["l_orderkey"].shape[0]):
+        if lt["_valid"][i] and lt["l_commitdate"][i] < lt["l_receiptdate"][i]:
+            late.add(int(lt["l_orderkey"][i]))
+    counts = np.zeros(len(ORDERPRIORITIES))
+    for i in range(ot["o_orderkey"].shape[0]):
+        if (
+            ot["_valid"][i]
+            and lo <= ot["o_orderdate"][i] < hi
+            and int(ot["o_orderkey"][i]) in late
+        ):
+            counts[int(ot["o_orderpriority"][i])] += 1
+    return counts
+
+
+def q12_oracle(
+    lineitem: Table, orders: Table, year: int = 1994,
+    modes: tuple[int, ...] = (5, 3),
+) -> dict:
+    """Per-shipmode high/low priority line counts (all modes; only the
+    selected ones can be nonzero)."""
+    from .datagen import SHIPMODES
+
+    lt, ot = _np(lineitem), _np(orders)
+    lo, hi = date_to_days(year, 1, 1), date_to_days(year + 1, 1, 1)
+    prio_of = {
+        int(k): int(p)
+        for k, p, v in zip(ot["o_orderkey"], ot["o_orderpriority"],
+                           ot["_valid"])
+        if v
+    }
+    high = np.zeros(len(SHIPMODES))
+    low = np.zeros(len(SHIPMODES))
+    for i in range(lt["l_orderkey"].shape[0]):
+        if not lt["_valid"][i]:
+            continue
+        if int(lt["l_shipmode"][i]) not in modes:
+            continue
+        if not (lt["l_commitdate"][i] < lt["l_receiptdate"][i]):
+            continue
+        if not (lt["l_shipdate"][i] < lt["l_commitdate"][i]):
+            continue
+        if not (lo <= lt["l_receiptdate"][i] < hi):
+            continue
+        ok = int(lt["l_orderkey"][i])
+        if ok not in prio_of:
+            continue
+        m = int(lt["l_shipmode"][i])
+        if prio_of[ok] < 2:
+            high[m] += 1
+        else:
+            low[m] += 1
+    return {"high_line_count": high, "low_line_count": low}
+
+
+def q18_oracle(
+    lineitem: Table, orders: Table, customer: Table,
+    threshold: int = 300, k: int = 100,
+) -> dict:
+    """Large-volume customers: orders whose lineitems sum past ``threshold``
+    quantity, top-``k`` by o_totalprice descending."""
+    lt, ot, ct = _np(lineitem), _np(orders), _np(customer)
+    sums: dict[int, float] = {}
+    for i in range(lt["l_orderkey"].shape[0]):
+        if lt["_valid"][i]:
+            ok = int(lt["l_orderkey"][i])
+            sums[ok] = sums.get(ok, 0.0) + float(lt["l_quantity"][i])
+    seg_of = {
+        int(c): int(s)
+        for c, s, v in zip(ct["c_custkey"], ct["c_mktsegment"], ct["_valid"])
+        if v
+    }
+    rows = []
+    for i in range(ot["o_orderkey"].shape[0]):
+        if not ot["_valid"][i]:
+            continue
+        ok = int(ot["o_orderkey"][i])
+        if sums.get(ok, 0.0) <= threshold:
+            continue
+        ck = int(ot["o_custkey"][i])
+        if ck not in seg_of:
+            continue
+        rows.append(
+            (
+                ok,
+                ck,
+                seg_of[ck],
+                int(ot["o_orderdate"][i]),
+                int(ot["o_totalprice"][i]),
+                sums[ok],
+            )
+        )
+    rows.sort(key=lambda r: (-r[4], r[0]))
+    rows = rows[:k]
+    names = ("o_orderkey", "o_custkey", "c_mktsegment", "o_orderdate",
+             "o_totalprice", "sum_qty")
+    return {
+        n: np.array([r[j] for r in rows]) for j, n in enumerate(names)
+    }
+
+
 def q19_oracle(lineitem: Table, part: Table, terms=None) -> float:
     from .queries import Q19_TERMS
 
@@ -174,4 +285,5 @@ def q19_oracle(lineitem: Table, part: Table, terms=None) -> float:
 
 
 __all__ = ["q1_oracle", "q6_oracle", "q17_oracle", "q3_oracle",
-           "q14_oracle", "q19_oracle"]
+           "q14_oracle", "q19_oracle", "q4_oracle", "q12_oracle",
+           "q18_oracle"]

@@ -1,0 +1,70 @@
+"""Declarative query-plan subsystem (paper §3.1 / Fig 6).
+
+Three layers, replacing the hand-wired shard_map plumbing that used to live
+per-query in ``relational/distributed.py``:
+
+* :mod:`~repro.relational.planner.logical` — a small relational operator DAG
+  (``Scan``/``Filter``/``Project``/``HashJoin``/``GroupBy``/``Aggregate``/
+  ``TopK``) with schema and cardinality inference, plus the tiny expression
+  language predicates and aggregates are written in.
+* :mod:`~repro.relational.planner.physical` — the cost-based physical
+  planner: places an ``Exchange(shuffle|broadcast)`` edge on every join /
+  group boundary using the paper's hybrid broadcast threshold and the
+  topology autotuner's makespan model, tracks partitioning properties so
+  co-partitioned pipelines share one exchange, and renders a deterministic
+  ``explain()`` string (the golden-snapshot surface).
+* :mod:`~repro.relational.planner.executor` — compiles a physical plan into
+  ONE ``shard_map``-ed function over the mask-carrying operators in
+  ``relational/operators.py``, with every exchange routed through the
+  query's auto-tuned :class:`~repro.core.multiplexer.CommMultiplexer` and
+  capacity overflow surfaced as an error (never silent row loss).
+
+``planner.tpch`` expresses all nine TPC-H queries (Q1/Q3/Q4/Q6/Q12/Q14/
+Q17/Q18/Q19) as logical plans; ``relational/distributed.py``'s entry points
+are thin wrappers over it.
+"""
+
+from .logical import (
+    Aggregate,
+    Expr,
+    Filter,
+    GroupBy,
+    HashJoin,
+    Project,
+    Scan,
+    TopK,
+    col,
+    lit,
+    where,
+)
+from .physical import (
+    PhysicalPlan,
+    PlannerConfig,
+    choose_join_strategy,
+    exchange_bytes,
+    plan_physical,
+    use_preaggregation,
+)
+from .executor import compile_plan, execute_plan
+
+__all__ = [
+    "Aggregate",
+    "Expr",
+    "Filter",
+    "GroupBy",
+    "HashJoin",
+    "Project",
+    "Scan",
+    "TopK",
+    "col",
+    "lit",
+    "where",
+    "PhysicalPlan",
+    "PlannerConfig",
+    "choose_join_strategy",
+    "exchange_bytes",
+    "plan_physical",
+    "use_preaggregation",
+    "execute_plan",
+    "compile_plan",
+]

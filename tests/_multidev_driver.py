@@ -556,6 +556,73 @@ def scenario_tpch_pod_mesh_1proc():
     print("PASS tpch_pod_mesh_1proc")
 
 
+def scenario_distributed_q1_q6():
+    """Q1/Q6 (the no-network queries, paper Fig 11) over 8 shards match the
+    numpy oracle, on both the flat mesh and a (2 pods x 4) two-level mesh —
+    and the pod run equals the flat run exactly."""
+    from repro.relational import datagen, oracle
+    from repro.relational.distributed import q1_distributed, q6_distributed
+
+    tabs = datagen.gen_all(0.01)
+    li = tabs["lineitem"]
+    want1 = oracle.q1_oracle(li)
+    want6 = oracle.q6_oracle(li)
+    flat1 = q1_distributed(li, num_shards=8)
+    for k in want1:
+        np.testing.assert_allclose(np.asarray(flat1[k]), want1[k], rtol=1e-4,
+                                   err_msg=k)
+    pod1 = q1_distributed(li, num_shards=8, num_pods=2)
+    for k in flat1:
+        np.testing.assert_allclose(np.asarray(flat1[k]), np.asarray(pod1[k]),
+                                   rtol=1e-6, err_msg=f"pod/{k}")
+    flat6 = float(q6_distributed(li, num_shards=8))
+    np.testing.assert_allclose(flat6, want6, rtol=1e-4)
+    pod6 = float(q6_distributed(li, num_shards=8, num_pods=2))
+    np.testing.assert_allclose(pod6, flat6, rtol=1e-6)
+    print("PASS distributed_q1_q6")
+
+
+def scenario_planner_new_queries():
+    """The plan-only queries (Q4/Q12/Q18 — no hand-written distributed
+    version exists) over 8 shards match the numpy oracle, and Q18 on a
+    (2 pods x 4) two-level mesh equals the flat run exactly."""
+    from repro.relational import datagen, oracle
+    from repro.relational.distributed import (
+        q4_distributed, q12_distributed, q18_distributed,
+    )
+
+    tabs = datagen.gen_all(0.01)
+    li, od, cu = tabs["lineitem"], tabs["orders"], tabs["customer"]
+
+    got4 = q4_distributed(li, od, num_shards=8)
+    want4 = oracle.q4_oracle(li, od)
+    assert want4.sum() > 0
+    np.testing.assert_allclose(np.asarray(got4["order_count"]), want4)
+
+    got12 = q12_distributed(li, od, num_shards=8)
+    want12 = oracle.q12_oracle(li, od)
+    np.testing.assert_allclose(got12["high_line_count"],
+                               want12["high_line_count"])
+    np.testing.assert_allclose(got12["low_line_count"],
+                               want12["low_line_count"])
+
+    got18 = q18_distributed(li, od, cu, num_shards=8)
+    want18 = oracle.q18_oracle(li, od, cu)
+    assert len(want18["o_orderkey"]) > 0
+    got_map = {int(k): (int(tp), float(sq)) for k, tp, sq in zip(
+        got18["o_orderkey"], got18["o_totalprice"], got18["sum_qty"])}
+    want_map = {int(k): (int(tp), float(sq)) for k, tp, sq in zip(
+        want18["o_orderkey"], want18["o_totalprice"], want18["sum_qty"])}
+    assert got_map == want_map, (got_map, want_map)
+
+    pod18 = q18_distributed(li, od, cu, num_shards=8, num_pods=2)
+    for k in got18:
+        np.testing.assert_array_equal(
+            np.asarray(got18[k]), np.asarray(pod18[k]), err_msg=f"pod/{k}"
+        )
+    print("PASS planner_new_queries")
+
+
 def scenario_tpch_pack_equiv():
     """Scheduled transport + Pallas fused pack matches the monolithic-XLA
     baseline bit-exactly on the TPC-H join queries (Q17 and Q3)."""

@@ -24,6 +24,8 @@ SCENARIOS = [
     "ckpt_elastic",
     "distributed_q17",
     "distributed_q14_q19",
+    "distributed_q1_q6",
+    "planner_new_queries",
     "tpch_pod_mesh_1proc",
     "decode_sharded_equiv",
     "serve_continuous_ep",

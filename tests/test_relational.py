@@ -7,7 +7,7 @@ import pytest
 from repro.core import hybrid as H
 from repro.core import skew
 from repro.relational import datagen, oracle, queries
-from repro.relational.plan import PlannerConfig, choose_join_strategy
+from repro.relational.planner import PlannerConfig, choose_join_strategy
 from repro.relational.table import Table, morsels, pad_to, shard_rows
 
 
