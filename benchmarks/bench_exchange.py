@@ -135,6 +135,99 @@ def pack_ab(rows: int = 8192, width: int = 4,
     return records
 
 
+def overlap_audit(rows: int = 512, d: int = 32) -> list[dict]:
+    """Overlap audit of the two-level EP dispatch, from lowered HLO.
+
+    Compiles dispatch -> expert matmul -> combine through the two-level
+    fabric on a (pod, model) mesh, then extracts per-collective bytes and
+    dot FLOPs from the optimized HLO (``launch.hlo_cost``) and reports the
+    roofline ``overlap_fraction``: the share of collective time the
+    latency-hiding scheduler may hide behind compute (async -start/-done
+    pairs, capped by available compute).  Needs >= 4 devices (real or
+    ``--xla_force_host_platform_device_count`` fakes); on a single-device
+    run it emits a skip marker — the modeled audit in
+    ``bench_serve.ep_overlap_audit`` is then the signal.
+    """
+    import jax
+
+    n = jax.device_count()
+    if n < 4:
+        emit("overlap_audit/hlo", "skipped", "",
+             f"{n} device(s) — modeled audit in bench_serve is the signal")
+        return []
+
+    import numpy as np
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.core import exchange
+    from repro.launch import hlo_cost
+    from repro.launch.roofline import RooflineTerms
+
+    records = []
+    for pods in (1, 2):
+        mesh = Mesh(
+            np.array(jax.devices()[:n]).reshape(pods, n // pods),
+            ("pod", "model"),
+        )
+        pod = "pod" if pods > 1 else None
+
+        def body(x, w, pod=pod):
+            # leading dim of the exchanged tensor == joint unit count n
+            t = x.reshape((n, x.shape[0] // n) + x.shape[1:])
+            if pod is None:
+                y = exchange.all_to_all(t, "model")
+            else:
+                y = exchange.dispatch_two_level(t, "model", pod)
+            y = jnp.einsum("ncd,df->ncf", y, w)  # the expert FFN stand-in
+            if pod is None:
+                y = exchange.all_to_all(y, "model")
+            else:
+                y = exchange.combine_two_level(y, "model", pod)
+            return y.reshape(x.shape)
+
+        fn = shard_map(
+            body, mesh=mesh,
+            in_specs=(P(("pod", "model")), P()),
+            out_specs=P(("pod", "model")),
+            axis_names={"pod", "model"}, check_vma=False,
+        )
+        x = jnp.zeros((rows, d), jnp.float32)
+        w = jnp.zeros((d, d), jnp.float32)
+        sh = NamedSharding(mesh, P(("pod", "model")))
+        compiled = (
+            jax.jit(fn, in_shardings=(sh, NamedSharding(mesh, P())))
+            .lower(x, w).compile()
+        )
+        cost = hlo_cost.analyze(compiled.as_text())
+        terms = RooflineTerms(
+            arch="two_level_ep", shape=f"{rows}x{d}",
+            mesh=f"{pods}x{n // pods}",
+            flops_per_chip=cost["flops"], bytes_per_chip=cost["bytes"],
+            coll_bytes_per_chip=cost["collective_bytes"],
+            model_flops_global=0.0, chips=n,
+            async_coll_bytes_per_chip=cost["async_collective_bytes"],
+        )
+        coll_total = sum(cost["collective_bytes"].values())
+        coll_async = sum(cost["async_collective_bytes"].values())
+        emit(f"overlap_audit/{terms.mesh}/collective_bytes", coll_total, "B",
+             ",".join(sorted(cost["collective_bytes"])))
+        emit(f"overlap_audit/{terms.mesh}/async_bytes", coll_async, "B",
+             "-start/-done pairs the scheduler may overlap")
+        emit(f"overlap_audit/{terms.mesh}/overlap_fraction",
+             f"{terms.overlap_fraction:.3f}", "",
+             "HLO-derived; 0 when the backend lowers collectives sync")
+        records.append({
+            "mesh": terms.mesh,
+            "collective_bytes": cost["collective_bytes"],
+            "async_collective_bytes": cost["async_collective_bytes"],
+            "flops_per_chip": cost["flops"],
+            "overlap_fraction": round(terms.overlap_fraction, 4),
+        })
+    return records
+
+
 def run(smoke: bool = False) -> dict:
     """Full mode emits CSV only; smoke mode also returns the JSON record
     (reduced sizes) that ``benchmarks.run --smoke`` writes to
@@ -143,10 +236,12 @@ def run(smoke: bool = False) -> dict:
         return {
             "fig12b": fig12b(),
             "pack_ab": pack_ab(rows=2048, dests=(8, 64)),
+            "overlap_audit": overlap_audit(),
         }
     fig12b()
     moe_exchange_ab()
     pack_ab()
+    overlap_audit()
     return {}
 
 

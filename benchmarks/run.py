@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only fig10|skew|conn|tpch|fig3|fig12|kern|serve|roofline]
     PYTHONPATH=src python -m benchmarks.run --smoke [--json-dir artifacts/bench]
+    PYTHONPATH=src python -m benchmarks.run --compare BASELINE[.json] [--json-dir artifacts/bench]
 
 Emits ``name,value,unit,note`` CSV lines.  ``--smoke`` runs the reduced
 CI lane — the static-vs-continuous serve comparison, the exchange pack
@@ -9,13 +10,25 @@ A/B, and the planned-TPC-H sweep — and writes ``BENCH_serve.json`` /
 ``BENCH_exchange.json`` / ``BENCH_tpch.json`` under ``--json-dir``; the CI
 ``bench-smoke`` job uploads those as artifacts, so the perf trajectory is
 recorded per PR instead of living only in logs.
+
+``--compare`` turns the trajectory into a gate: it diffs the fresh
+records in ``--json-dir`` against a baseline (the previous run's uploaded
+``BENCH_*.json``, a file or a directory of them) and exits nonzero if any
+recorded metric regressed by more than ``--compare-threshold`` (default
+2x — wide enough for shared-runner noise, narrow enough to catch a real
+slowdown).  Direction is inferred from the metric name: times / bytes /
+slot-steps are lower-is-better; ``tok_s`` and the ``*_ratio`` /
+``*_fraction`` scores are higher-is-better; everything else (counts,
+flags, tuned knobs) is informational and not gated.
 The roofline section reads the dry-run artifacts (run
 ``python -m repro.launch.dryrun`` first).
 """
 
 import argparse
+import glob as _glob
 import json
 import os
+import sys
 
 from . import (
     bench_autotune,
@@ -79,16 +92,109 @@ def smoke(json_dir: str) -> None:
         print(f"# wrote {path}")
 
 
+# Metric-direction inference for --compare.  Checked against the LEAF key
+# of each dotted path; higher-is-better wins ties (tok_s ends in "_s" but
+# is a throughput).  Unmatched keys (counts, knobs, flags) are not gated.
+_HIGHER_IS_BETTER = ("tok_s", "_ratio", "_fraction")
+_LOWER_IS_BETTER = ("_s", "_ms", "_us", "_bytes", "slot_steps", "_steps")
+
+
+def _direction(path: str) -> str | None:
+    leaf = path.rsplit(".", 1)[-1]
+    if any(leaf.endswith(s) for s in _HIGHER_IS_BETTER):
+        return "higher"
+    if any(leaf.endswith(s) for s in _LOWER_IS_BETTER):
+        return "lower"
+    return None
+
+
+def _numeric_leaves(obj, prefix: str = "") -> dict:
+    """Flatten a JSON record to {dotted.path: float} over numeric leaves."""
+    out = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(_numeric_leaves(v, f"{prefix}{k}."))
+    elif isinstance(obj, (list, tuple)):
+        for i, v in enumerate(obj):
+            out.update(_numeric_leaves(v, f"{prefix}{i}."))
+    elif isinstance(obj, bool):
+        pass
+    elif isinstance(obj, (int, float)):
+        out[prefix.rstrip(".")] = float(obj)
+    return out
+
+
+def compare(baseline: str, json_dir: str, threshold: float = 2.0) -> int:
+    """Gate the fresh BENCH_*.json in json_dir against a recorded baseline.
+
+    ``baseline`` is either one BENCH_*.json file or a directory of them
+    (the previous CI run's artifact).  Returns the number of regressions:
+    gated metrics present in BOTH records whose ratio worsened past
+    ``threshold``.  Metrics only in one side are reported but never fail —
+    benches may be added or retired without poisoning the gate.
+    """
+    if os.path.isdir(baseline):
+        base_files = sorted(_glob.glob(os.path.join(baseline, "BENCH_*.json")))
+    else:
+        base_files = [baseline]
+    if not base_files:
+        print(f"# compare: no BENCH_*.json under {baseline!r} — nothing to gate")
+        return 0
+
+    regressions = []
+    for bf in base_files:
+        name = os.path.basename(bf)
+        ff = os.path.join(json_dir, name)
+        if not os.path.exists(ff):
+            print(f"# compare: {name}: no fresh record in {json_dir} — skipped")
+            continue
+        with open(bf) as f:
+            base_leaves = _numeric_leaves(json.load(f))
+        with open(ff) as f:
+            fresh_leaves = _numeric_leaves(json.load(f))
+        gated = checked = 0
+        for path, bval in sorted(base_leaves.items()):
+            d = _direction(path)
+            if d is None or path not in fresh_leaves:
+                continue
+            checked += 1
+            fval = fresh_leaves[path]
+            if bval <= 0.0:
+                continue  # ratio undefined; nothing sane to gate against
+            ratio = fval / bval
+            worse = ratio > threshold if d == "lower" else ratio < 1.0 / threshold
+            if worse:
+                gated += 1
+                regressions.append((name, path, d, bval, fval, ratio))
+        print(f"# compare: {name}: {checked} metrics checked, {gated} regressed")
+
+    for name, path, d, bval, fval, ratio in regressions:
+        print(f"REGRESSION {name}:{path} ({d} is better): "
+              f"{bval:.6g} -> {fval:.6g} ({ratio:.2f}x)")
+    if not regressions:
+        print(f"# compare: OK — no metric regressed past {threshold}x")
+    return len(regressions)
+
+
 def main():
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--only", default="all")
     p.add_argument("--smoke", action="store_true",
                    help="reduced CI lane; writes BENCH_*.json to --json-dir")
     p.add_argument("--json-dir", default=os.path.join("artifacts", "bench"))
+    p.add_argument("--compare", default=None, metavar="BASELINE",
+                   help="BENCH_*.json file or directory to gate --json-dir "
+                        "against; exits nonzero on any regression")
+    p.add_argument("--compare-threshold", type=float, default=2.0,
+                   help="worsening ratio that counts as a regression")
     args = p.parse_args()
     print("name,value,unit,note")
     if args.smoke:
         smoke(args.json_dir)
+    if args.compare is not None:
+        n = compare(args.compare, args.json_dir, args.compare_threshold)
+        sys.exit(1 if n else 0)
+    if args.smoke:
         return
     for name, fn in SECTIONS.items():
         if args.only in ("all", name):

@@ -85,6 +85,16 @@ class ModelConfig:
     num_microbatches: int = 1
     moe_impl: Literal["dense", "gspmd", "ep_shardmap"] = "dense"
     exchange_impl: str = "round_robin"
+    # Async overlap of exchange with expert compute: split the EP capacity
+    # buffers into this many chunks and double-buffer dispatch against the
+    # expert FFN (bit-identical for any divisor of the capacity; an ambient
+    # multiplexer's tuned pipeline_chunks takes precedence).
+    moe_async_chunks: int = 1
+    # Unroll factor for the layer scan (transformer decode/prefill) and the
+    # microbatch accumulation scan: > 1 interleaves consecutive iterations'
+    # HLO so the latency-hiding scheduler can start layer k+1's dispatch
+    # while layer k's expert compute runs.  Numerics-neutral.
+    overlap_unroll: int = 1
     grad_sync: Literal["auto", "hierarchical"] = "auto"
     # §Perf levers (off in the paper-faithful baseline)
     grad_shard_constraint: bool = False  # pin grads to param sharding (AR->RS)

@@ -156,6 +156,138 @@ def decode_table_stats(cfg, batch_size: int, num_shards: int) -> TableStats:
     return TableStats(rows=E * C, row_bytes=row_bytes)
 
 
+def moe_expert_time(
+    cfg, batch_size: int, num_shards: int, chip: ChipSpec = V5E
+) -> float:
+    """Modeled expert-FFN seconds for ONE decode step on one parallel unit.
+
+    Each unit owns ``E / num_shards`` experts and receives ``num_shards``
+    capacity buffers per local expert, so it batch-matmuls
+    ``E_loc * num_shards * C`` slot rows through the SwiGLU (three
+    ``d x f`` matmuls = ``6 * d * f`` FLOPs per row — the compute the
+    async dispatch pipeline hides exchange DMA behind).  Same duck-typed
+    ``cfg`` contract as :func:`decode_table_stats`.
+    """
+    E = int(getattr(cfg, "num_experts", 0) or 1)
+    k = int(getattr(cfg, "top_k", 0) or 1)
+    d = int(cfg.d_model)
+    f = int(getattr(cfg, "moe_d_ff", 0) or getattr(cfg, "d_ff", d))
+    n = max(num_shards, 1)
+    t_loc = max(1, batch_size // n)
+    C = ep_capacity(t_loc, k, E, float(getattr(cfg, "capacity_factor", 1.0)))
+    E_loc = max(E // n, 1)
+    slot_rows = E_loc * n * C
+    return slot_rows * 6.0 * d * f / chip.peak_flops_bf16
+
+
+def ep_dispatch_makespan(
+    stats: TableStats,
+    n: int,
+    compute_s: float,
+    impl: str = "round_robin",
+    pack_impl: str = "xla",
+    num_chunks: int = 1,
+    transport_chunks: int = 1,
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+    num_pods: int = 1,
+    overlap: bool = True,
+) -> float:
+    """Modeled makespan of one EP layer: dispatch + expert FFN + combine.
+
+    ``stats`` is the per-unit dispatch shape (:func:`decode_table_stats`),
+    ``compute_s`` the expert compute it feeds (:func:`moe_expert_time`).
+    ``num_chunks`` splits the capacity buffers into that many chunks
+    pipelined exactly like the MoE layer's double-buffered path: chunk
+    ``c + 1``'s dispatch DMA runs while chunk ``c``'s experts compute.
+
+    ``overlap=False`` prices the fully serialized schedule —
+    ``chunks * (dispatch + compute + combine)`` with no hiding; that is the
+    baseline the bench lane compares against.  With overlap on, every chunk
+    boundary (the ``chunks - 1`` internal ones plus the cross-layer one the
+    transformer's unrolled layer scan exposes) hides
+    ``min(compute, exchange)`` scaled by the DMA-independence factor
+    ``1 - 1/n_dma`` — the same overlap model as the chunked relational
+    shuffle (:func:`exchange_makespan`), extended with the coarse-hop DMAs
+    on a pod mesh.
+    """
+    if stats.rows % num_chunks:
+        num_chunks = 1
+    chunk = TableStats(rows=stats.rows // num_chunks, row_bytes=stats.row_bytes)
+    disp_c = exchange_makespan(
+        chunk, n, impl, pack_impl, 1, transport_chunks, chip, topology,
+        num_pods,
+    )
+    comb_c = disp_c  # the return trip runs the same schedule mirrored
+    comp_c = compute_s / num_chunks
+    serial = num_chunks * (disp_c + comp_c + comb_c)
+    if not overlap:
+        return serial
+    n_dma = 1 if impl == "xla" else max(n - 1, 1) * transport_chunks
+    if num_pods > 1 and impl != "xla":
+        n_dma += num_pods - 1  # the coarse-hop phases are independent DMAs
+    overlap_frac = 0.0 if n_dma <= 1 else 1.0 - 1.0 / n_dma
+    boundaries = num_chunks  # chunks-1 internal + 1 cross-layer (unroll)
+    hidden = boundaries * overlap_frac * min(comp_c, disp_c + comb_c)
+    return max(serial - hidden, serial - num_chunks * (disp_c + comb_c))
+
+
+def tune_ep_dispatch(
+    cfg,
+    batch_size: int,
+    num_shards: int,
+    num_pods: int = 1,
+    impl: str = "round_robin",
+    pack_impl: str = "xla",
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+) -> dict:
+    """Pick the async chunk count for the EP dispatch pipeline per topology.
+
+    ``num_shards`` is the TOTAL unit count (pods x in-pod shards — the
+    joint axis the two-level fabric spans).  Sweeps the pipeline chunk
+    candidates that divide the per-expert capacity and returns::
+
+        {"chunks", "serial_s", "async_s", "overlap_fraction", "candidates"}
+
+    where ``serial_s`` is the unoverlapped schedule at the chosen chunking,
+    ``async_s`` the overlapped one, and ``overlap_fraction`` the share of
+    exchange time hidden behind expert compute — the modeled counterpart of
+    the HLO-audited number :func:`repro.launch.roofline` reports.
+    """
+    E = int(getattr(cfg, "num_experts", 0) or 1)
+    k = int(getattr(cfg, "top_k", 0) or 1)
+    n_inner = max(num_shards // max(num_pods, 1), 1)
+    t_loc = max(1, batch_size // max(num_shards, 1))
+    C = ep_capacity(t_loc, k, E, float(getattr(cfg, "capacity_factor", 1.0)))
+    stats = decode_table_stats(cfg, batch_size, num_shards)
+    compute_s = moe_expert_time(cfg, batch_size, num_shards, chip)
+    scored = []
+    for ch in PIPELINE_CANDIDATES:
+        if C % ch:
+            continue
+        async_s = ep_dispatch_makespan(
+            stats, n_inner, compute_s, impl, pack_impl, ch, 1, chip,
+            topology, num_pods, overlap=True,
+        )
+        serial_s = ep_dispatch_makespan(
+            stats, n_inner, compute_s, impl, pack_impl, ch, 1, chip,
+            topology, num_pods, overlap=False,
+        )
+        scored.append((async_s, ch, serial_s))
+    scored.sort()
+    async_s, chunks, serial_s = scored[0]
+    exchange_s = serial_s - compute_s
+    frac = (serial_s - async_s) / exchange_s if exchange_s > 0 else 0.0
+    return {
+        "chunks": chunks,
+        "serial_s": serial_s,
+        "async_s": async_s,
+        "overlap_fraction": frac,
+        "candidates": tuple((ch, a, s) for a, ch, s in scored),
+    }
+
+
 def exchange_makespan(
     stats: TableStats,
     n: int,
@@ -600,6 +732,9 @@ __all__ = [
     "TunedConfig",
     "decode_table_stats",
     "ep_capacity",
+    "moe_expert_time",
+    "ep_dispatch_makespan",
+    "tune_ep_dispatch",
     "exchange_makespan",
     "pod_strategy_times",
     "candidate_configs",

@@ -608,6 +608,99 @@ def hash_shuffle_two_level(
     return out_rows, out_valid, dropped
 
 
+# ----------------------------------------------------------------------------
+# Generic two-level dispatch/combine: the token-routing fabric (paper §3.1).
+# ----------------------------------------------------------------------------
+
+def _hop1_impl(impl: AllToAllImpl) -> AllToAllImpl:
+    """Coarse-hop transport: shift phases are valid for every pod count
+    (one_factorization needs even n), xla keeps the monolithic baseline."""
+    return "xla" if impl == "xla" else "round_robin"
+
+
+def dispatch_two_level(
+    x: jax.Array,
+    inner_axis: str,
+    outer_axis: str,
+    impl: AllToAllImpl = "round_robin",
+    num_chunks: int = 1,
+) -> jax.Array:
+    """All-to-all over the JOINT ``(outer, inner)`` axis, as two hops.
+
+    ``x[q * n + j]`` (leading dim ``N = P * n``, mesh device order
+    ``(pod, inner) -> pod * n + inner``) is the chunk destined for pod ``q``'s
+    device ``j``; the result's entry ``q * n + j`` is the chunk received from
+    that device — exactly the contract of a flat :func:`all_to_all` over the
+    joint axis, but routed hierarchically:
+
+    1. **coarse, cross-pod** — ``x`` is regrouped by destination *pod* and
+       shipped over ``outer_axis`` with ONE message per peer pod (the
+       paper's multiplexer-to-multiplexer connection over the network in
+       the large: ``P - 1`` coarse messages instead of ``N - 1`` fine ones).
+    2. **fine, in-pod** — a scheduled all-to-all over ``inner_axis``
+       delivers each sub-chunk to its in-pod owner (``num_chunks`` is the
+       transport sub-chunking of this hop).
+
+    Both hops are pure permutations of the same elements — zero arithmetic —
+    so the result is BIT-IDENTICAL to the flat joint-axis all-to-all for
+    every dtype.  This is what lets MoE expert dispatch (and any other
+    token-routing workload) cross a pod mesh without a correctness caveat.
+
+    Generalizes :func:`hash_shuffle_two_level` beyond hash keys: here the
+    caller has already assigned every row a destination slot (the leading
+    index); the two-level route only changes *how* the bytes move.
+    """
+    P = _axis_size(outer_axis)
+    n = _axis_size(inner_axis)
+    if P == 1:
+        return all_to_all(x, inner_axis, impl=impl, num_chunks=num_chunks)
+    N = P * n
+    assert x.shape[0] == N, (
+        f"leading dim {x.shape[0]} != joint axis size {P} * {n}"
+    )
+    rest = x.shape[1:]
+    # Hop 1 (coarse): x3[q] = everything destined for pod q, contiguous.
+    x3 = x.reshape((P, n) + rest)
+    h = all_to_all(x3, outer_axis, impl=_hop1_impl(impl))
+    # h[q, j] = chunk from pod q (same inner index) destined for (my_pod, j).
+    h2 = jnp.swapaxes(h, 0, 1).reshape((n, -1))
+    # Hop 2 (fine): deliver to the in-pod owner j.
+    g = all_to_all(h2, inner_axis, impl=impl, num_chunks=num_chunks)
+    # g[j, q] = chunk from (q, j) destined for me; restore flat (q, j) order.
+    out = jnp.swapaxes(g.reshape((n, P) + rest), 0, 1)
+    return out.reshape((N,) + rest)
+
+
+def combine_two_level(
+    x: jax.Array,
+    inner_axis: str,
+    outer_axis: str,
+    impl: AllToAllImpl = "round_robin",
+    num_chunks: int = 1,
+) -> jax.Array:
+    """The return trip of :func:`dispatch_two_level` (same flat-all-to-all
+    contract), with the hop order mirrored: fine in-pod first, then ONE
+    coarse message per peer pod over ``outer_axis``.  Also a pure
+    permutation — bit-identical to the flat route."""
+    P = _axis_size(outer_axis)
+    n = _axis_size(inner_axis)
+    if P == 1:
+        return all_to_all(x, inner_axis, impl=impl, num_chunks=num_chunks)
+    N = P * n
+    assert x.shape[0] == N, (
+        f"leading dim {x.shape[0]} != joint axis size {P} * {n}"
+    )
+    rest = x.shape[1:]
+    # Hop 1 (fine): group by destination inner index, shuffle in-pod.
+    x3 = jnp.swapaxes(x.reshape((P, n) + rest), 0, 1).reshape((n, -1))
+    g = all_to_all(x3, inner_axis, impl=impl, num_chunks=num_chunks)
+    # g[j, q] -> h[q, j]: everything destined for pod q, contiguous again.
+    h = jnp.swapaxes(g.reshape((n, P) + rest), 0, 1)
+    # Hop 2 (coarse): one message per peer pod over the slow network.
+    out3 = all_to_all(h, outer_axis, impl=_hop1_impl(impl))
+    return out3.reshape((N,) + rest)
+
+
 __all__ = [
     "AllToAllImpl",
     "PackImpl",
@@ -624,4 +717,6 @@ __all__ = [
     "pack_by_destination",
     "hash_shuffle",
     "hash_shuffle_two_level",
+    "dispatch_two_level",
+    "combine_two_level",
 ]

@@ -53,6 +53,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import warnings
 from typing import Any, Callable, Sequence
 
@@ -99,6 +100,60 @@ class CommMultiplexer:
             transport = 1
         return exchange.all_to_all(
             x, axis_name, impl=self.impl, num_chunks=transport
+        )
+
+    def _resolve_transport(self, message_dim: int) -> int:
+        """Transport sub-chunking that divides ``message_dim`` (else 1)."""
+        transport = self.transport_chunks
+        if transport > 1 and message_dim % transport:
+            warnings.warn(
+                f"transport_chunks={transport} does not divide message dim "
+                f"{message_dim}; shipping whole messages",
+                stacklevel=3,
+            )
+            transport = 1
+        return transport
+
+    # -- token routing: the one exchange fabric -----------------------------
+
+    def dispatch(self, x: jax.Array, axis_name: str) -> jax.Array:
+        """All-to-all token dispatch over the WHOLE mesh, pod axis included.
+
+        On a single-level mesh this is exactly :meth:`all_to_all` over
+        ``axis_name``.  On a two-level mesh the leading dim must span the
+        JOINT ``(pod, axis_name)`` axis (``N = P * n``, mesh device order)
+        and the route is :func:`repro.core.exchange.dispatch_two_level`:
+        one coarse message per peer pod over the slow network, then the
+        fine in-pod scheduled all-to-all — the same two hops as
+        :meth:`hash_shuffle_global`, generalized beyond hash keys to any
+        caller-assigned destination layout (MoE expert dispatch).  Both
+        hops are pure permutations, so the result is bit-identical to a
+        flat all-to-all over the joint axis.
+        """
+        pod = self.plan.pod_axis
+        if pod is None:
+            return self.all_to_all(x, axis_name)
+        self.plan.validate_axis_for_alltoall(axis_name)
+        transport = self._resolve_transport(
+            self.plan.num_pods * math.prod(x.shape[1:])
+        )
+        return exchange.dispatch_two_level(
+            x, axis_name, pod, impl=self.impl, num_chunks=transport
+        )
+
+    def combine(self, x: jax.Array, axis_name: str) -> jax.Array:
+        """The return trip of :meth:`dispatch` (fine in-pod hop first, then
+        one coarse message per peer pod).  Same flat-all-to-all contract,
+        same bit-identity guarantee."""
+        pod = self.plan.pod_axis
+        if pod is None:
+            return self.all_to_all(x, axis_name)
+        self.plan.validate_axis_for_alltoall(axis_name)
+        transport = self._resolve_transport(
+            self.plan.num_pods * math.prod(x.shape[1:])
+        )
+        return exchange.combine_two_level(
+            x, axis_name, pod, impl=self.impl, num_chunks=transport
         )
 
     def shuffle_consume(

@@ -207,6 +207,7 @@ def run_cell(
         }
         art["unknown_trip_whiles"] = corrected["unknown_trip_whiles"]
         art["collective_bytes"] = corrected["collective_bytes"]
+        art["async_collective_bytes"] = corrected["async_collective_bytes"]
         art["hlo_bytes"] = len(hlo)
         art["lower_s"] = t1 - t0
         art["compile_s"] = t2 - t1

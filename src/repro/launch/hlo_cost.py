@@ -151,6 +151,9 @@ class Cost:
     flops: float = 0.0
     bytes: float = 0.0
     coll: dict[str, float] = dataclasses.field(default_factory=dict)
+    # subset of ``coll`` issued async (-start/-done pairs or async-start
+    # wrappers): the collectives the scheduler may overlap with compute
+    coll_async: dict[str, float] = dataclasses.field(default_factory=dict)
     unknown_trip_whiles: int = 0
 
     def add(self, other: "Cost", mult: float = 1.0):
@@ -158,6 +161,8 @@ class Cost:
         self.bytes += other.bytes * mult
         for k, v in other.coll.items():
             self.coll[k] = self.coll.get(k, 0.0) + v * mult
+        for k, v in other.coll_async.items():
+            self.coll_async[k] = self.coll_async.get(k, 0.0) + v * mult
         self.unknown_trip_whiles += other.unknown_trip_whiles
 
 
@@ -203,7 +208,10 @@ def _analyze_comp(
             op == c + "-start" for c in _COLLECTIVES
         ):
             kind = op.removesuffix("-start")
-            total.coll[kind] = total.coll.get(kind, 0.0) + _shape_bytes(instr.shape_txt)
+            b = _shape_bytes(instr.shape_txt)
+            total.coll[kind] = total.coll.get(kind, 0.0) + b
+            if op.endswith("-start"):
+                total.coll_async[kind] = total.coll_async.get(kind, 0.0) + b
         if op == "while":
             m = _WHILE_RE.search(instr.rest)
             trip = None
@@ -225,6 +233,12 @@ def _analyze_comp(
                 total.flops += inner.flops
                 for k, v in inner.coll.items():
                     total.coll[k] = total.coll.get(k, 0.0) + v
+                    if op == "async-start":
+                        # async wrapper: everything inside runs off-thread
+                        total.coll_async[k] = total.coll_async.get(k, 0.0) + v
+                for k, v in inner.coll_async.items():
+                    if op != "async-start":  # already counted above
+                        total.coll_async[k] = total.coll_async.get(k, 0.0) + v
                 total.unknown_trip_whiles += inner.unknown_trip_whiles
         if op == "conditional":
             mb = _BRANCHES_RE.search(instr.rest)
@@ -292,6 +306,7 @@ def analyze(hlo_text: str) -> dict:
         "flops": c.flops,
         "bytes": c.bytes,
         "collective_bytes": {k: int(v) for k, v in c.coll.items()},
+        "async_collective_bytes": {k: int(v) for k, v in c.coll_async.items()},
         "unknown_trip_whiles": c.unknown_trip_whiles,
     }
 

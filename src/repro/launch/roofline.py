@@ -24,9 +24,9 @@ from typing import Any
 from repro.core.topology import V5E
 
 _COLLECTIVE_RE = re.compile(
-    r"=\s*(?:\(([^)]*)\)|((?:[a-z0-9]+)\[[^\]]*\]))\s*"
+    r"=\s*(?:\(([^)]*)\)|((?:[a-z0-9]+)\[[^\]]*\](?:\{[^}]*\})?))\s*"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start|-done)?\("
+    r"(-start|-done)?\("
 )
 _SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
 
@@ -50,12 +50,17 @@ def _shape_bytes(text: str) -> int:
     return total
 
 
-def collective_bytes(hlo_text: str) -> dict[str, int]:
-    """Per-op-kind result bytes of every collective in the per-device HLO.
+def collective_bytes_split(hlo_text: str) -> tuple[dict[str, int], dict[str, int]]:
+    """(total, async) per-op-kind result bytes of the per-device HLO.
 
-    ``-start``/``-done`` async pairs are counted once (on the start).
+    ``-start``/``-done`` async pairs are counted once (on the start) and
+    additionally tallied in the *async* dict: those are the collectives the
+    latency-hiding scheduler may overlap with compute, which is what the
+    overlap-fraction audit measures.  Plain (synchronous) collectives only
+    appear in the total.
     """
-    out: dict[str, int] = {}
+    total: dict[str, int] = {}
+    async_: dict[str, int] = {}
     for line in hlo_text.splitlines():
         if "-done(" in line:
             continue  # async completion: counted at -start
@@ -64,8 +69,19 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
             continue
         shape_txt = m.group(1) or m.group(2)
         kind = m.group(3)
-        out[kind] = out.get(kind, 0) + _shape_bytes(shape_txt)
-    return out
+        b = _shape_bytes(shape_txt)
+        total[kind] = total.get(kind, 0) + b
+        if m.group(4) == "-start":
+            async_[kind] = async_.get(kind, 0) + b
+    return total, async_
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-op-kind result bytes of every collective in the per-device HLO.
+
+    ``-start``/``-done`` async pairs are counted once (on the start).
+    """
+    return collective_bytes_split(hlo_text)[0]
 
 
 @dataclasses.dataclass
@@ -79,6 +95,9 @@ class RooflineTerms:
     model_flops_global: float  # 6*N*D (or 6*N_active*D)
     chips: int
     ideal_bytes_global: float = 0.0  # mandatory HBM traffic of a perfect impl
+    # Subset of coll_bytes_per_chip issued as async -start/-done pairs (the
+    # collectives the latency-hiding scheduler is free to overlap).
+    async_coll_bytes_per_chip: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def compute_s(self) -> float:
@@ -92,6 +111,24 @@ class RooflineTerms:
     def collective_s(self) -> float:
         total = sum(self.coll_bytes_per_chip.values())
         return total / V5E.ici_link_bandwidth
+
+    @property
+    def async_collective_s(self) -> float:
+        total = sum(self.async_coll_bytes_per_chip.values())
+        return total / V5E.ici_link_bandwidth
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Fraction of collective time hideable behind compute.
+
+        Only async (-start/-done) collectives can overlap; of those, at
+        most ``compute_s`` worth can actually hide.  0 when the program
+        has no collectives at all.
+        """
+        if self.collective_s <= 0.0:
+            return 0.0
+        hidden = min(self.compute_s, self.async_collective_s)
+        return hidden / self.collective_s
 
     @property
     def dominant(self) -> str:
@@ -144,6 +181,8 @@ class RooflineTerms:
             "useful_flops_fraction": self.useful_flops_fraction,
             "roofline_fraction": self.roofline_fraction,
             "collective_breakdown": self.coll_bytes_per_chip,
+            "async_collective_s": self.async_collective_s,
+            "overlap_fraction": self.overlap_fraction,
         }
 
 
@@ -208,6 +247,7 @@ def from_artifact(art: dict) -> RooflineTerms:
         model_flops_global=art["model_flops"],
         chips=art["chips"],
         ideal_bytes_global=art.get("ideal_bytes", 0.0),
+        async_coll_bytes_per_chip=art.get("async_collective_bytes", {}),
     )
 
 
@@ -230,6 +270,7 @@ def format_table(rows: list[RooflineTerms]) -> str:
 
 __all__ = [
     "collective_bytes",
+    "collective_bytes_split",
     "RooflineTerms",
     "model_flops",
     "from_artifact",

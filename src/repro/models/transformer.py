@@ -170,6 +170,19 @@ def _maybe_remat(fn, cfg: ModelConfig):
     return jax.checkpoint(fn, policy=policy)
 
 
+def _scan_unroll(cfg: ModelConfig) -> int:
+    """Unroll factor for the layer scans (cfg.overlap_unroll).
+
+    > 1 interleaves consecutive layers' HLO inside one scan iteration, which
+    is what lets XLA's latency-hiding scheduler start layer k+1's MoE
+    dispatch DMA while layer k's expert FFN still runs — the cross-layer
+    half of the async overlap path (the in-layer half is the chunked
+    dispatch pipeline in models/moe.py).  Numerics-neutral: unrolling
+    changes instruction scheduling, not values.
+    """
+    return max(int(getattr(cfg, "overlap_unroll", 1) or 1), 1)
+
+
 def _run_segments(params, cfg: ModelConfig, x, cos, sin):
     for i, seg in enumerate(segments_for(cfg)):
         body = _maybe_remat(
@@ -177,7 +190,7 @@ def _run_segments(params, cfg: ModelConfig, x, cos, sin):
             cfg,
         )
         if cfg.scan_layers:
-            x, _ = lax.scan(body, x, params[f"seg{i}"])
+            x, _ = lax.scan(body, x, params[f"seg{i}"], unroll=_scan_unroll(cfg))
         else:
             for l in range(seg.count):
                 p_l = jax.tree.map(lambda a: a[l], params[f"seg{i}"])
@@ -280,7 +293,10 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
             return x, new_cache_l
 
         body = _maybe_remat(body, cfg) if False else body  # no remat at decode
-        x, new_cache[f"seg{i}"] = lax.scan(body, x, (params[f"seg{i}"], cache[f"seg{i}"]))
+        x, new_cache[f"seg{i}"] = lax.scan(
+            body, x, (params[f"seg{i}"], cache[f"seg{i}"]),
+            unroll=_scan_unroll(cfg),
+        )
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.unembed(params["embedding"], cfg, x)
     return logits[:, 0], new_cache
@@ -312,7 +328,10 @@ def decode_step_slots(params, cfg: ModelConfig, tokens, cache, positions):
             )
             return x, new_cache_l
 
-        x, new_cache[f"seg{i}"] = lax.scan(body, x, (params[f"seg{i}"], cache[f"seg{i}"]))
+        x, new_cache[f"seg{i}"] = lax.scan(
+            body, x, (params[f"seg{i}"], cache[f"seg{i}"]),
+            unroll=_scan_unroll(cfg),
+        )
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.unembed(params["embedding"], cfg, x)
     return logits[:, 0], new_cache
@@ -351,7 +370,9 @@ def prefill(params, cfg: ModelConfig, batch):
             return shard(h, "batch", "seq_sp", "d_model"), out_cache
 
         body = _maybe_remat(body, cfg)
-        x, cache[f"seg{i}"] = lax.scan(body, x, params[f"seg{i}"])
+        x, cache[f"seg{i}"] = lax.scan(
+            body, x, params[f"seg{i}"], unroll=_scan_unroll(cfg)
+        )
 
     x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = L.unembed(params["embedding"], cfg, x[:, -1:])

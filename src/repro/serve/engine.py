@@ -340,12 +340,20 @@ class ContinuousEngine:
         from repro.distributed.sharding import current_mesh_context
 
         ctx = current_mesh_context()
-        if ctx is None or ctx.exchange_size <= 1:
+        if ctx is None:
+            return None
+        # A parallel unit is one device of the JOINT (pod, exchange) axis:
+        # on a pod mesh the dispatch runs the two-level fabric across
+        # pods * exchange_size units, and the tuner must price the capacity
+        # buffers the MoE layer actually sizes for that unit count.
+        pods = ctx.mesh.shape[ctx.pod_axis] if ctx.pod_axis is not None else 1
+        units = ctx.exchange_size * pods
+        if units <= 1:
             return None
         from repro.core.autotune import decode_table_stats
         from repro.core.multiplexer import make_multiplexer
 
-        stats = decode_table_stats(self.cfg, self.batch_size, ctx.exchange_size)
+        stats = decode_table_stats(self.cfg, self.batch_size, units)
         return make_multiplexer(ctx.mesh, auto=True, table_stats=[stats])
 
     def _mux_scope(self):

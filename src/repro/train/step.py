@@ -108,7 +108,14 @@ def make_train_step(
             zero_grads = _pin(jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), state.params
             ))
-            (loss, grads), _ = jax.lax.scan(accum, (jnp.float32(0), zero_grads), mbs)
+            # overlap_unroll > 1 interleaves consecutive microbatches' HLO so
+            # the latency-hiding scheduler can overlap microbatch k+1's MoE
+            # dispatch with microbatch k's expert compute (same knob as the
+            # transformer's layer scans; numerics-neutral).
+            (loss, grads), _ = jax.lax.scan(
+                accum, (jnp.float32(0), zero_grads), mbs,
+                unroll=max(int(getattr(cfg, "overlap_unroll", 1) or 1), 1),
+            )
             loss = loss / num_mb
             grads = jax.tree.map(lambda g: g / num_mb, grads)
 

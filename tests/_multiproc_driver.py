@@ -188,6 +188,58 @@ def scenario_tuner_dci_aware():
     print("PASS tuner_dci_aware")
 
 
+def scenario_ep_dispatch_two_level():
+    """MoE expert dispatch routed through the two-level fabric across a REAL
+    process boundary is token-for-token identical to the flat all-to-all
+    oracle (the same tokens shipped over a single joint mesh axis), and the
+    flat route on the pod mesh is rejected at trace time — the exchange
+    either takes the coarse-then-fine hops or does not run at all."""
+    from repro.configs.base import ModelConfig
+    from repro.core.multiplexer import make_multiplexer, use_multiplexer
+    from repro.distributed.sharding import (
+        MeshContext, default_rules, mesh_context,
+    )
+    from repro.models import moe
+
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=16, num_heads=2,
+        num_kv_heads=2, d_ff=32, vocab_size=64, num_experts=8, top_k=2,
+        moe_d_ff=32, moe_impl="ep_shardmap", capacity_factor=8.0,
+        dtype="float32", param_dtype="float32",
+    )
+    # identical on every process (same seed) — the cluster-wide replicas
+    params = moe.init_moe_layer(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, cfg.d_model), jnp.float32)
+
+    pod_mesh = make_pod_mesh(axes=("pod", "model"))
+    pods, n = pod_mesh.devices.shape
+    N = pods * n
+    assert cfg.num_experts % N == 0 and x.shape[0] % N == 0, (cfg, N)
+
+    flat_mesh = jax.sharding.Mesh(np.asarray(jax.devices()), ("model",))
+    ctx_flat = MeshContext(mesh=flat_mesh, rules=default_rules(False),
+                           data_axes=())
+    ctx_pod = MeshContext(mesh=pod_mesh, rules=default_rules(True),
+                          pod_axis="pod", data_axes=())
+
+    with mesh_context(ctx_flat):
+        want = fetch(moe.moe_ep(params, cfg, x))
+    with mesh_context(ctx_pod):
+        got = fetch(moe.moe_ep(params, cfg, x))
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+    # a single-level multiplexer must not silently flat-route over DCI
+    mux_flat = make_multiplexer(flat_mesh)
+    try:
+        with mesh_context(ctx_pod), use_multiplexer(mux_flat):
+            moe.moe_ep(params, cfg, x)
+    except ValueError as e:
+        assert "single-level multiplexer" in str(e), e
+    else:
+        raise AssertionError("flat mux on the pod mesh did not raise")
+    print("PASS ep_dispatch_two_level")
+
+
 SCENARIOS = {
     name.removeprefix("scenario_"): fn
     for name, fn in list(globals().items())

@@ -1,0 +1,123 @@
+"""The bench regression gate: benchmarks/run.py --compare.
+
+Pure-python (no jax) — exercises direction inference, the leaf flattener,
+and the gate's pass/fail decisions on synthetic BENCH records shaped like
+the real smoke-lane output.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from benchmarks.run import _direction, _numeric_leaves, compare
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_direction_inference():
+    # throughput beats the "_s" time suffix
+    assert _direction("continuous.tok_s") == "higher"
+    assert _direction("slot_steps_ratio") == "higher"
+    assert _direction("ep_overlap.2x4.overlap_fraction") == "higher"
+    assert _direction("continuous.wall_s") == "lower"
+    assert _direction("queries.q3.planned_ms") == "lower"
+    assert _direction("queries.q3.wire_bytes") == "lower"
+    assert _direction("static.slot_steps") == "lower"
+    # knobs/counts are not gated
+    assert _direction("ep_overlap.2x4.chunks") is None
+    assert _direction("workload.requests") is None
+
+
+def test_numeric_leaves_flatten():
+    rec = {"a": {"b": [1, 2.5]}, "ok": True, "name": "x", "z": 0}
+    assert _numeric_leaves(rec) == {"a.b.0": 1.0, "a.b.1": 2.5, "z": 0.0}
+
+
+@pytest.fixture
+def bench_dirs(tmp_path):
+    base, fresh = tmp_path / "base", tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+
+    def write(d, rec):
+        (d / "BENCH_serve.json").write_text(json.dumps(rec))
+
+    return base, fresh, write
+
+
+BASE_REC = {
+    "continuous": {"slot_steps": 100, "tok_s": 50.0, "wall_s": 2.0},
+    "slot_steps_ratio": 1.4,
+    "queries": {"q3": {"planned_ms": 10.0, "wire_bytes": 4096, "correct": True}},
+    "ep_overlap": {"2x4": {"chunks": 1, "overlap_fraction": 0.03}},
+}
+
+
+def test_compare_identical_passes(bench_dirs, capsys):
+    base, fresh, write = bench_dirs
+    write(base, BASE_REC), write(fresh, BASE_REC)
+    assert compare(str(base), str(fresh)) == 0
+    assert "0 regressed" in capsys.readouterr().out
+
+
+def test_compare_within_threshold_passes(bench_dirs):
+    base, fresh, write = bench_dirs
+    write(base, BASE_REC)
+    rec = json.loads(json.dumps(BASE_REC))
+    rec["queries"]["q3"]["planned_ms"] = 19.0  # 1.9x — inside the 2x band
+    rec["continuous"]["tok_s"] = 26.0  # dropped, but < 2x
+    write(fresh, rec)
+    assert compare(str(base), str(fresh)) == 0
+
+
+def test_compare_flags_both_directions(bench_dirs, capsys):
+    base, fresh, write = bench_dirs
+    write(base, BASE_REC)
+    rec = json.loads(json.dumps(BASE_REC))
+    rec["queries"]["q3"]["planned_ms"] = 25.0  # lower-is-better, 2.5x up
+    rec["continuous"]["tok_s"] = 20.0  # higher-is-better, 2.5x down
+    rec["ep_overlap"]["2x4"]["chunks"] = 4  # knob change: never gated
+    write(fresh, rec)
+    assert compare(str(base), str(fresh)) == 2
+    out = capsys.readouterr().out
+    assert "REGRESSION BENCH_serve.json:queries.q3.planned_ms" in out
+    assert "REGRESSION BENCH_serve.json:continuous.tok_s" in out
+    assert "chunks" not in [l.split(":")[-1] for l in out.splitlines()]
+
+
+def test_compare_added_and_removed_metrics_never_fail(bench_dirs):
+    base, fresh, write = bench_dirs
+    rec = json.loads(json.dumps(BASE_REC))
+    rec["new_metric_s"] = 1.0
+    del rec["queries"]
+    write(base, BASE_REC), write(fresh, rec)
+    assert compare(str(base), str(fresh)) == 0
+    # a baseline file with no fresh counterpart is skipped, not failed
+    os.remove(fresh / "BENCH_serve.json")
+    assert compare(str(base), str(fresh)) == 0
+
+
+def test_compare_single_file_baseline(bench_dirs):
+    base, fresh, write = bench_dirs
+    write(base, BASE_REC), write(fresh, BASE_REC)
+    assert compare(str(base / "BENCH_serve.json"), str(fresh)) == 0
+
+
+def test_cli_exit_codes(bench_dirs):
+    base, fresh, write = bench_dirs
+    write(base, BASE_REC)
+    rec = json.loads(json.dumps(BASE_REC))
+    rec["continuous"]["wall_s"] = 100.0
+    write(fresh, rec)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    cmd = [sys.executable, "-m", "benchmarks.run",
+           "--compare", str(base), "--json-dir", str(fresh)]
+    r = subprocess.run(cmd, capture_output=True, text=True, cwd=REPO, env=env)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout
+    # the gate widens with --compare-threshold
+    r = subprocess.run(cmd + ["--compare-threshold", "100"],
+                       capture_output=True, text=True, cwd=REPO, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr

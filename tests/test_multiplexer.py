@@ -88,3 +88,35 @@ def test_one_factorization_verifies_even(n):
 def test_one_factorization_rejects_odd(n):
     with pytest.raises(ValueError):
         S.one_factorization(n)
+
+
+# -- the EP exchange policy resolver (models/moe._resolve_exchange) ----------
+
+def test_ep_exchange_resolver_mux_wins_both_knobs():
+    """ONE source of truth: with an ambient multiplexer BOTH the transport
+    and the pack impl come from it, no matter what the config says; without
+    one the legacy ``cfg.exchange_impl`` knob drives and the pack falls back
+    to the XLA reference.  Flips both knobs to opposite values so a split
+    resolver (transport from one source, pack from the other) cannot pass."""
+    from repro.configs.base import ModelConfig
+    from repro.core.multiplexer import current_multiplexer, use_multiplexer
+    from repro.models.moe import _resolve_exchange
+
+    cfg = ModelConfig(
+        name="t", family="moe", num_layers=1, d_model=8, num_heads=1,
+        num_kv_heads=1, d_ff=16, vocab_size=32, num_experts=4, top_k=1,
+        moe_d_ff=16, exchange_impl="one_factorization",
+    )
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:1]), ("q",))
+    mux = make_multiplexer(mesh, impl="xla", pack_impl="pallas")
+
+    # no ambient mux: config transport, reference pack
+    assert _resolve_exchange(cfg, current_multiplexer()) == (
+        "one_factorization", "xla")
+    # ambient mux: both knobs follow its tuned policy
+    with use_multiplexer(mux):
+        assert _resolve_exchange(cfg, current_multiplexer()) == (
+            "xla", "pallas")
+    # scope exit restores the config-driven policy
+    assert _resolve_exchange(cfg, current_multiplexer()) == (
+        "one_factorization", "xla")

@@ -26,6 +26,7 @@ SCENARIOS = [
     "production_mesh",
     "tuner_dci_aware",
     "tpch_pod_mesh",
+    "ep_dispatch_two_level",
 ]
 
 _PROBE = """

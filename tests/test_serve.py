@@ -279,3 +279,23 @@ def test_request_stats_populated(minicpm):
     assert eng.stats["slot_steps"] == eng.stats["decode_steps"] * eng.batch_size
     assert eng.stats["live_slot_steps"] <= eng.stats["slot_steps"]
     assert eng.stats["admitted"] == eng.stats["finished"] == len(reqs)
+
+
+def test_serve_continuous_ep_pods_two_level():
+    """num_pods=2 fake-device case: continuous == static greedy bit-identity
+    with the EP dispatch routed through the two-level fabric.  The scenario
+    needs 8 fake devices, so it runs in a fresh subprocess (pytest has
+    already initialized jax; the fake-device flag must precede that)."""
+    import os
+    import subprocess
+    import sys
+
+    driver = os.path.join(os.path.dirname(__file__), "_multidev_driver.py")
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, driver, "serve_continuous_ep_pods"],
+        capture_output=True, text=True, timeout=420, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "PASS serve_continuous_ep_pods" in proc.stdout
