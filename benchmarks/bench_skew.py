@@ -4,12 +4,20 @@ The paper's argument for hybrid parallelism: Zipf z=0.84 overloads the
 largest of 240 thread-level partitions by >2x but the largest of 6
 server-level partitions by only ~2.8 %.  We reproduce the numbers
 analytically and add the salting mitigation's effect.
+
+``run(smoke=True)`` is the CI bench-smoke lane: it records the adaptive
+optimizer's view of the Zipf(1.2) TPC-H scenario — estimated plain vs
+salted overload of Q17's lineitem shuffle (as ``*_balance_fraction``,
+higher is better, gated by ``run.py --compare``) and the measured wall
+time of the plain vs salted plan shape (``*_s``, lower is better) — into
+``BENCH_skew.json``, so salting-decision or salted-shape regressions
+show up in the perf trajectory.
 """
 
 import numpy as np
 
 from repro.core import skew
-from .common import emit
+from .common import emit, time_jit
 
 
 def paper_table():
@@ -27,25 +35,95 @@ def z_sweep():
         emit("skew/overload_6", f"{o6:.3f}", "x-fair", f"z={z}")
 
 
+def _shard_of(keys: np.ndarray, n: int) -> np.ndarray:
+    # int64 cast only for bincount (it refuses uint64); modulus keeps
+    # values < n, far below 2**63
+    return (skew._hash_keys(keys, 0) % np.uint64(n)).astype(np.int64)
+
+
 def salting():
     rng = np.random.default_rng(0)
     keys = (rng.zipf(1.5, size=200_000) % 10_000).astype(np.int64)
-    loads = np.bincount(skew._hash_keys(keys, 0) % np.uint64(16), minlength=16)
-    base = skew.straggler_excess(loads)
+    base = skew.straggler_excess(np.bincount(_shard_of(keys, 16), minlength=16))
     counts = np.bincount(keys)
     heavy = np.argsort(counts)[-16:]
+    # salt_keys returns uint64 (the widened salted key space)
     salted = skew.salt_keys(keys, heavy_keys=heavy, num_salts=16)
     after = skew.straggler_excess(
-        np.bincount(skew._hash_keys(salted, 0) % np.uint64(16), minlength=16)
+        np.bincount(_shard_of(salted, 16), minlength=16)
     )
     emit("skew/straggler_excess_base", f"{base*100:.1f}", "%", "16 shards, zipf1.5")
     emit("skew/straggler_excess_salted", f"{after*100:.1f}", "%", "16 hot keys salted")
 
 
-def run():
-    paper_table()
-    z_sweep()
-    salting()
+def adaptive_q17(smoke: bool = False) -> dict:
+    """The adaptive optimizer's Zipf(1.2) scenario, recorded for CI.
+
+    Estimated overloads come from the SAME stats/pricing path the planner
+    uses (deterministic — seeded sample, analytic placement).  Wall times
+    execute both plan shapes on the host device: the salted shape pays a
+    partial + broadcast + combine group-by, and this records that overhead
+    next to the balance it buys.
+    """
+    from repro.relational import datagen
+    from repro.relational import stats as rstats
+    from repro.relational.planner import tpch
+    from repro.relational.planner.executor import compile_plan
+
+    z, sf, shards = 1.2, 0.01, 8
+    tabs = datagen.gen_all(sf, zipf_partkey=z)
+    pq = tpch.q17(brand=11, container=25)  # selects the heaviest part
+    catalog = {t: tabs[t].capacity for t in pq.tables}
+    stats = rstats.collect_stats({t: tabs[t] for t in pq.tables})
+
+    cs = stats["lineitem"].columns["l_partkey"]
+    heavy = rstats.salting_keys(cs, shards)
+    num_salts = rstats.choose_num_salts(heavy, shards)
+    over_plain = rstats.partition_overload(cs.heavy_hitters, shards)
+    over_salted = rstats.partition_overload(
+        cs.heavy_hitters, shards, num_salts=num_salts, salted=heavy
+    )
+
+    iters = 3 if smoke else 5
+    plan_salted = pq.plan(catalog, 1, stats=stats)
+    plan_plain = pq.plan(catalog, 1)
+    t_salted = time_jit(compile_plan(plan_salted, tabs), iters=iters)
+    t_plain = time_jit(compile_plan(plan_plain, tabs), iters=iters)
+
+    emit("skew/q17_overload_plain", f"{over_plain:.2f}", "x-fair",
+         f"zipf{z} l_partkey, {shards} shards")
+    emit("skew/q17_overload_salted", f"{over_salted:.2f}", "x-fair",
+         f"{len(heavy)} heavy keys x {num_salts} salts")
+    emit("skew/q17_plan_plain", f"{t_plain*1e3:.2f}", "ms", f"SF={sf} host")
+    emit("skew/q17_plan_salted", f"{t_salted*1e3:.2f}", "ms",
+         f"SF={sf} host, salted shape overhead "
+         f"{t_salted/t_plain:.2f}x")
+    return {
+        "z": z, "sf": sf, "num_shards": shards,
+        "q17": {
+            # informational (no gated suffix): the raw overload factors
+            "overload_plain_x": over_plain,
+            "overload_salted_x": over_salted,
+            "num_salts": num_salts,
+            "heavy_keys": len(heavy),
+            # gated, higher is better: fair_share / max_load in (0, 1]
+            "plain_balance_fraction": 1.0 / over_plain,
+            "salted_balance_fraction": 1.0 / over_salted,
+            # gated, lower is better: wall time of each plan shape
+            "planned_plain_s": t_plain,
+            "planned_salted_s": t_salted,
+        },
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    record = {}
+    if not smoke:
+        paper_table()
+        z_sweep()
+        salting()
+    record.update(adaptive_q17(smoke=smoke))
+    return record
 
 
 if __name__ == "__main__":

@@ -6,8 +6,9 @@
 
 Emits ``name,value,unit,note`` CSV lines.  ``--smoke`` runs the reduced
 CI lane — the static-vs-continuous serve comparison, the exchange pack
-A/B, and the planned-TPC-H sweep — and writes ``BENCH_serve.json`` /
-``BENCH_exchange.json`` / ``BENCH_tpch.json`` under ``--json-dir``; the CI
+A/B, the planned-TPC-H sweep, and the adaptive-optimizer skew scenario —
+and writes ``BENCH_serve.json`` / ``BENCH_exchange.json`` /
+``BENCH_tpch.json`` / ``BENCH_skew.json`` under ``--json-dir``; the CI
 ``bench-smoke`` job uploads those as artifacts, so the perf trajectory is
 recorded per PR instead of living only in logs.
 
@@ -83,9 +84,12 @@ def smoke(json_dir: str) -> None:
     exchange_rec = bench_exchange.run(smoke=True)
     print("# --- tpch (smoke) ---")
     tpch_rec = bench_tpch.run(smoke=True)
+    print("# --- skew (smoke) ---")
+    skew_rec = bench_skew.run(smoke=True)
     for name, rec in (("BENCH_serve.json", serve_rec),
                       ("BENCH_exchange.json", exchange_rec),
-                      ("BENCH_tpch.json", tpch_rec)):
+                      ("BENCH_tpch.json", tpch_rec),
+                      ("BENCH_skew.json", skew_rec)):
         path = os.path.join(json_dir, name)
         with open(path, "w") as f:
             json.dump(rec, f, indent=2, sort_keys=True)

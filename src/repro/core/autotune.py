@@ -298,6 +298,7 @@ def exchange_makespan(
     chip: ChipSpec = V5E,
     topology: str = "ring",
     num_pods: int = 1,
+    skew: float = 1.0,
 ) -> float:
     """Modeled end-to-end time of one decoupled exchange (pack + shuffle).
 
@@ -313,7 +314,16 @@ def exchange_makespan(
     in-pod shuffle over the ``num_pods``-fold received buffer (the zero-drop
     bound inflates the static hop-2 shapes by ``num_pods``, and the model
     prices the shapes that actually move, not the expected occupancy).
+
+    ``skew`` is the measured or estimated relative load of the max-loaded
+    shard (``max_partition_load / fair_share``; 1.0 = balanced).  An exchange
+    finishes when its SLOWEST receiver finishes, so wire time scales with the
+    max-loaded shard, not the average — the planner prices plain vs salted
+    repartitioning of a skewed key by calling this with each shape's overload
+    factor (paper §3.1).  The default keeps every existing call bit-identical.
     """
+    if skew < 1.0:
+        raise ValueError(f"skew is max/fair-share and must be >= 1.0: {skew}")
     if n <= 1 and num_pods <= 1:
         return 0.0
     if stats.rows == 0:
@@ -323,7 +333,7 @@ def exchange_makespan(
         hop1_impl = "xla" if impl == "xla" else "round_robin"
         pod_msg = -(-stats.rows // num_pods) * stats.row_bytes
         hop1 = pack_time(stats.rows, stats.row_bytes, num_pods, chip, pack_impl)
-        hop1 += shuffle_time(
+        hop1 += skew * shuffle_time(
             num_pods, pod_msg, chip, hop1_impl, 1, "switch", network="dci"
         )
         hop1 += shuffle_time(num_pods, 4, chip, hop1_impl, 1, "switch",
@@ -337,7 +347,7 @@ def exchange_makespan(
     rows_c = stats.rows // C
     assert rows_c % transport_chunks == 0, (rows_c, transport_chunks)
     pack_c = pack_time(rows_c, stats.row_bytes, n, chip, pack_impl)
-    ship_c = shuffle_time(
+    ship_c = skew * shuffle_time(
         n, rows_c * stats.row_bytes, chip, impl, transport_chunks, topology
     )
     # Each chunk also ships the [n] per-destination counts (4 B messages).

@@ -131,15 +131,40 @@ def salt_keys(
     Non-heavy keys are returned untouched (shifted into the salted key space
     deterministically so no collisions with salted heavy keys are possible).
     The join build side must replicate heavy-key rows across all salts.
+
+    All arithmetic happens in the uint64 key space: the historical int64
+    version silently wrapped ``key * num_salts`` for keys above ``2**63 /
+    num_salts`` and mapped negative keys and their uint64 twins to the same
+    salted slot.  Keys whose shifted value would not fit uint64 — and any
+    negative key, which would alias a large uint64 key after the cast — now
+    raise instead of corrupting the partitioning.  ``unsalt_keys`` is the
+    exact inverse: ``unsalt_keys(salt_keys(k, ...), num_salts) == k``.
     """
     keys = np.asarray(keys)
-    out = keys.astype(np.int64) * np.int64(num_salts)
-    heavy = np.isin(keys, heavy_keys)
-    salts = (_hash_keys(np.arange(keys.size), seed) % np.uint64(num_salts)).astype(
-        np.int64
-    )
+    num_salts = int(num_salts)
+    if num_salts < 1:
+        raise ValueError(f"salt_keys: num_salts must be >= 1, got {num_salts}")
+    if np.issubdtype(keys.dtype, np.signedinteger) and keys.size and keys.min() < 0:
+        raise ValueError(
+            "salt_keys: negative keys would alias large uint64 keys after the "
+            "unsigned cast; hash keys into [0, 2**64) first"
+        )
+    u = keys.astype(np.uint64)
+    if num_salts > 1 and u.size and int(u.max()) >= 2**64 // num_salts:
+        raise ValueError(
+            f"salt_keys: key {int(u.max())} * num_salts={num_salts} overflows "
+            "the uint64 salted key space"
+        )
+    out = u * np.uint64(num_salts)
+    heavy = np.isin(u, np.asarray(heavy_keys).astype(np.uint64))
+    salts = _hash_keys(np.arange(keys.size), seed) % np.uint64(num_salts)
     out[heavy] += salts[heavy]
     return out
+
+
+def unsalt_keys(salted: np.ndarray, num_salts: int) -> np.ndarray:
+    """Recover the original keys from ``salt_keys`` output (exact inverse)."""
+    return np.asarray(salted).astype(np.uint64) // np.uint64(num_salts)
 
 
 def straggler_excess(loads: np.ndarray) -> float:
@@ -155,5 +180,6 @@ __all__ = [
     "zipf_partition_overload_analytic",
     "zipf_partition_overload_expected",
     "salt_keys",
+    "unsalt_keys",
     "straggler_excess",
 ]

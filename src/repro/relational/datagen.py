@@ -133,7 +133,10 @@ def gen_orders(sf: float, seed: int = 3) -> Table:
 
 
 def gen_lineitem(
-    sf: float, seed: int = 4, zipf_partkey: float | None = None
+    sf: float,
+    seed: int = 4,
+    zipf_partkey: float | None = None,
+    zipf_orderkey: float | None = None,
 ) -> Table:
     rng = np.random.default_rng(seed)
     n = table_capacity("lineitem", sf)
@@ -152,7 +155,12 @@ def gen_lineitem(
     # draw order matters: keep the original columns' draws in their original
     # sequence (dict order below) and append the Q4/Q12 columns' draws after,
     # so pre-existing columns stay bit-identical across the schema extension
-    orderkey = rng.integers(0, norder, n).astype(np.int32)
+    # (zipf_orderkey replaces the orderkey draw IN PLACE, so it only
+    # perturbs downstream draws when actually enabled — Q18 skew scenarios)
+    if zipf_orderkey:
+        orderkey = _zipf_ranks(rng, n, norder, zipf_orderkey).astype(np.int32)
+    else:
+        orderkey = rng.integers(0, norder, n).astype(np.int32)
     discount = rng.integers(0, 11, n).astype(np.int32)  # percent
     tax = rng.integers(0, 9, n).astype(np.int32)  # percent
     returnflag = rng.integers(0, len(RETURNFLAGS), n).astype(np.int32)
@@ -186,12 +194,17 @@ def gen_lineitem(
     )
 
 
-def gen_all(sf: float, seed: int = 0, zipf_partkey: float | None = None):
+def gen_all(
+    sf: float,
+    seed: int = 0,
+    zipf_partkey: float | None = None,
+    zipf_orderkey: float | None = None,
+):
     return {
         "part": gen_part(sf, seed + 1),
         "customer": gen_customer(sf, seed + 2),
         "orders": gen_orders(sf, seed + 3),
-        "lineitem": gen_lineitem(sf, seed + 4, zipf_partkey),
+        "lineitem": gen_lineitem(sf, seed + 4, zipf_partkey, zipf_orderkey),
     }
 
 

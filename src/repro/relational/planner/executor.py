@@ -32,6 +32,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from ...compat import fetch, make_mesh, shard_map
+from ...core import exchange as core_exchange
 from ...core.multiplexer import CommMultiplexer, make_multiplexer
 from .. import operators as ops
 from ..table import Table, pad_to, shard_rows
@@ -99,6 +100,7 @@ def _make_mux(
 
 def _exchange_by_key(
     mux: CommMultiplexer, tbl: Table, key_name: str, columns: list[str],
+    route_keys: jax.Array | None = None,
 ) -> tuple[Table, jax.Array]:
     """Decoupled exchange: repartition rows by hash(key) over the mesh.
 
@@ -106,6 +108,9 @@ def _exchange_by_key(
     in-axis shuffle on single-level meshes, the coarse-cross-pod +
     fine-in-pod exchange on two-level ones.  Capacity per (src, dst)
     message equals the local capacity — the static zero-drop bound.
+    ``route_keys`` overrides the ROUTING key only (the salted
+    repartitioning: heavy rows route by ``key * num_salts + salt`` while
+    the true key column ships unchanged in the row image).
     Returns ``(table, dropped)`` with ``dropped`` psum'd.
     """
     for c in columns:
@@ -117,12 +122,97 @@ def _exchange_by_key(
             )
     cap = tbl.valid.shape[0]
     rows = jnp.stack([tbl[c].astype(jnp.int32) for c in columns], axis=1)
+    keys = tbl[key_name] if route_keys is None else route_keys
     out_rows, out_valid, dropped = mux.hash_shuffle_global(
-        tbl[key_name].astype(jnp.int32), rows, SHUFFLE_AXIS,
+        keys.astype(jnp.int32), rows, SHUFFLE_AXIS,
         capacity=cap, valid=tbl.valid,
     )
     cols = {c: out_rows[:, i] for i, c in enumerate(columns)}
     return Table(cols, out_valid), dropped
+
+
+def _shuffle_histogram(
+    keys: jax.Array, valid: jax.Array, num_shards: int, axes
+) -> tuple[jax.Array, jax.Array]:
+    """Global per-destination row histogram of a (routing-key, valid) pair.
+
+    Uses the exact routing rule of the exchange (``fibonacci_hash % N``
+    over the GLOBAL shard count — ``hash_shuffle`` single-level,
+    ``hash_shuffle_two_level`` two-level), psum'd over the mesh, so the
+    result is the true arrival histogram.  Returns ``(hist, overload)``
+    with ``overload = max_load / fair_share`` (1.0 = balanced).
+    """
+    dest = (
+        core_exchange.fibonacci_hash(keys.astype(jnp.int32))
+        % jnp.uint32(num_shards)
+    ).astype(jnp.int32)
+    local = jnp.zeros((num_shards,), jnp.int32).at[dest].add(
+        valid.astype(jnp.int32)
+    )
+    hist = lax.psum(local, axes)
+    total = jnp.maximum(hist.sum(), 1).astype(jnp.float32)
+    overload = hist.max().astype(jnp.float32) * num_shards / total
+    return hist, overload
+
+
+def _global_shard_index(num_shards: int, num_pods: int) -> jax.Array:
+    if num_pods > 1:
+        return lax.axis_index("pod") * (num_shards // num_pods) + \
+            lax.axis_index(SHUFFLE_AXIS)
+    return lax.axis_index(SHUFFLE_AXIS)
+
+
+def _route_and_report(
+    tbl: Table, node: PNode, num_shards: int, num_pods: int, axes
+) -> tuple[jax.Array | None, dict]:
+    """Runtime re-optimization of one shuffle edge (paper §3.1).
+
+    Every shuffle psums its per-shard destination histogram.  On an edge
+    the planner marked salted, the MEASURED plain overload is compared to
+    the plan's runtime threshold inside the jit: above it, heavy-key rows
+    switch to the salted route (``key * num_salts + salt``, salt drawn
+    per-row from the row index so one key spreads evenly); below it —
+    stats were wrong, data is balanced — the exchange stays a plain hash
+    and downstream partial+combine still reduces correctly.  Returns the
+    routing-key override (None = plain) and the report entry exposed as
+    ``run.exchange_report``.
+    """
+    info = node.info
+    keys = tbl[info["key"]].astype(jnp.int32)
+    hist_plain, over_plain = _shuffle_histogram(
+        keys, tbl.valid, num_shards, axes
+    )
+    if not info.get("salted"):
+        return None, {
+            "hist": hist_plain,
+            "overload": over_plain,
+            "plain_overload": over_plain,
+            "salted": jnp.bool_(False),
+        }
+    s = int(info["num_salts"])
+    heavy = jnp.asarray(info["heavy_keys"], jnp.int32)
+    do_salt = over_plain > jnp.float32(info["runtime_threshold"])
+    # Per-row salt: hash the global row position (decorrelated across
+    # shards by the shard index) so each heavy key's rows spread evenly
+    # over all its sub-keys regardless of their layout.
+    gidx = _global_shard_index(num_shards, num_pods).astype(jnp.uint32)
+    iota = jnp.arange(keys.shape[0], dtype=jnp.uint32)
+    rsalt = (
+        core_exchange.fibonacci_hash(
+            iota + gidx * jnp.uint32(0x9E3779B9)
+        ) % jnp.uint32(s)
+    ).astype(jnp.int32)
+    salted_keys = keys * jnp.int32(s) + rsalt
+    route = jnp.where(
+        do_salt & jnp.isin(keys, heavy) & tbl.valid, salted_keys, keys
+    )
+    hist, overload = _shuffle_histogram(route, tbl.valid, num_shards, axes)
+    return route, {
+        "hist": hist,
+        "overload": overload,
+        "plain_overload": over_plain,
+        "salted": do_salt,
+    }
 
 
 def _broadcast_table(
@@ -213,6 +303,7 @@ def compile_plan(
             for i, name in enumerate(plan.scans)
         }
         drops: list[jax.Array] = []
+        reports: dict[str, dict] = {}
         memo: dict[int, object] = {}
 
         def ev(n: PNode):
@@ -245,9 +336,14 @@ def compile_plan(
                 if single:  # hash % 1 == 0: the exchange is the identity
                     return t
                 if n.info["exkind"] == "shuffle":
-                    out, d = _exchange_by_key(
-                        mux, t, n.info["key"], list(n.schema)
+                    route, rep = _route_and_report(
+                        t, n, num_shards, num_pods, axes
                     )
+                    out, d = _exchange_by_key(
+                        mux, t, n.info["key"], list(n.schema),
+                        route_keys=route,
+                    )
+                    reports[f"#{n.idx} {n.info['key']}"] = rep
                 else:
                     out, d = _broadcast_table(mux, t, list(n.schema))
                 drops.append(d)
@@ -267,6 +363,20 @@ def compile_plan(
                 t = ev(n.children[0])
                 gkeys, gvalid, out = ops.groupby_sorted(
                     t[n.info["key"]], t.valid, _agg_dict(t, n.info["aggs"])
+                )
+                return Table({n.info["key"]: gkeys, **out}, gvalid)
+            if n.kind == "groupby_combine":
+                # merge salted partials: every shard holds ALL partial
+                # groups (they arrive by broadcast), so re-grouping by the
+                # true key and re-summing the partial sums/counts — counts
+                # are small exact integers in f32 — yields the exact global
+                # aggregate, replicated.
+                t = ev(n.children[0])
+                aggs = {
+                    name: (t[name], "sum") for name, _e, _k in n.info["aggs"]
+                }
+                gkeys, gvalid, out = ops.groupby_sorted(
+                    t[n.info["key"]], t.valid, aggs
                 )
                 return Table({n.info["key"]: gkeys, **out}, gvalid)
             if n.kind == "groupby_dense":
@@ -313,7 +423,7 @@ def compile_plan(
 
         result = ev(plan.root)
         dropped = sum(drops) if drops else jnp.int32(0)
-        return result, dropped
+        return result, dropped, reports
 
     flat = []
     for t in prepped:
@@ -322,16 +432,18 @@ def compile_plan(
         body,
         mesh=mesh,
         in_specs=(P(axes),) * len(flat),
-        out_specs=(P(), P()),
+        out_specs=(P(), P(), P()),
         check_vma=_check_vma(plan, mux),
     )
     jfn = jax.jit(fn)
 
     def run():
-        result, dropped = jfn(*flat)
+        result, dropped, reports = jfn(*flat)
         _raise_on_dropped(plan.name, dropped)
+        run.exchange_report = fetch(reports)
         return fetch(result)
 
+    run.exchange_report = {}
     return run
 
 

@@ -29,6 +29,7 @@ from typing import Literal, Mapping
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..table import Table
 
@@ -238,6 +239,25 @@ def lit(v) -> Lit:
 
 def where(cond: Expr, then, other) -> Where:
     return Where(cond, _wrap(then), _wrap(other))
+
+
+def predicate_selectivity(pred: Expr, sample: Mapping[str, "np.ndarray"]) -> float:
+    """Fraction of ``sample`` rows passing ``pred`` — the estimation side of
+    the expression language.
+
+    ``sample`` maps column names to equal-length numpy arrays (a statistics
+    sample, see :mod:`repro.relational.stats`); the predicate is evaluated
+    with the exact same ``Expr.eval`` the executor uses, so the estimate and
+    the runtime filter can never disagree on semantics.  An empty sample
+    returns 1.0 (no evidence to prune on — keep the conservative capacity).
+    """
+    cols = {k: jnp.asarray(v) for k, v in sample.items()}
+    n = next(iter(cols.values())).shape[0] if cols else 0
+    if n == 0:
+        return 1.0
+    t = Table(cols, jnp.ones((n,), jnp.bool_))
+    mask = np.asarray(pred.eval(t)).astype(bool)
+    return float(mask.mean())
 
 
 # ----------------------------------------------------------------------------

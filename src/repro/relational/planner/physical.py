@@ -37,8 +37,15 @@ import math
 from typing import Literal
 
 from ...core import hybrid as H
-from ...core.autotune import TableStats, TunedConfig, tune_config
+from ...core.autotune import (
+    TableStats,
+    TunedConfig,
+    exchange_makespan,
+    pod_strategy_times,
+    tune_config,
+)
 from ...core.topology import ChipSpec, V5E
+from .. import stats as S
 from . import logical as L
 
 JoinStrategy = Literal["broadcast", "partition"]
@@ -101,10 +108,17 @@ def use_preaggregation(num_groups: int, rows: int, threshold: float = 0.5) -> bo
 # Physical nodes.
 # ----------------------------------------------------------------------------
 
-# partitioning property: None (round-robin morsels), ("hash", key), "replicated"
+# partitioning property: None (round-robin morsels), ("hash", key),
+# ("salted", key) — hash on the salted sub-key space, rows of one heavy key
+# span shards — or "replicated"
 Partitioning = object
 
 REPLICATED = "replicated"
+
+# Estimated plain-hash overload (max/fair-share) above which the planner
+# considers the salted repartitioning; also the runtime re-optimization
+# threshold the executor compares its measured histogram against.
+DEFAULT_SALT_THRESHOLD = 1.5
 
 
 @dataclasses.dataclass
@@ -199,12 +213,25 @@ def plan_physical(
     topology: str = "ring",
     name: str = "query",
     cross_pod: str | None = None,
+    stats: dict[str, S.TableProfile] | None = None,
+    salt_threshold: float = DEFAULT_SALT_THRESHOLD,
 ) -> PhysicalPlan:
     """Place exchanges, infer partitionings/capacities, tune the multiplexer.
 
     Pure function of the logical DAG + catalog + mesh shape — no devices
     touched, so it runs at test/CI time and its ``explain()`` rendering is
     deterministic.
+
+    ``stats`` (from :func:`repro.relational.stats.collect_stats`) switches
+    the planner from static pricing to adaptive: filter selectivities and
+    NDVs refine the row estimates behind each exchange's pricing, and a
+    shuffle key whose heavy-hitter profile predicts a plain-hash overload
+    above ``salt_threshold`` is planned as a SALTED repartitioning (heavy
+    keys split across salted sub-keys, ``core.skew.salt_keys``-style),
+    priced against the plain hash and a broadcast of the same edge.  The
+    capacity-based ``TableStats`` still size the zero-drop buffers and the
+    tuner input, so with no skew in the stats the emitted plan is
+    bit-identical to the stats-free one.
 
     On two-level meshes the cross-pod build-side strategy is itself a *plan*
     decision: a first pass places broadcast edges and prices them with
@@ -215,7 +242,15 @@ def plan_physical(
     must pull the probe onto the same hash partitioning.
     """
     cfg = cfg or PlannerConfig(num_units=num_shards, hybrid=True)
-    built = _plan_once(root, catalog, num_shards, cfg, reshard=False)
+
+    def build(reshard: bool) -> dict:
+        return _plan_once(
+            root, catalog, num_shards, cfg, reshard=reshard,
+            num_pods=num_pods, chip=chip, topology=topology,
+            stats=stats, salt_threshold=salt_threshold,
+        )
+
+    built = build(reshard=False)
     resolved_cross_pod = None
 
     def tune(b):
@@ -233,7 +268,7 @@ def plan_physical(
     if num_pods > 1:
         resolved_cross_pod = cross_pod or tuned.cross_pod or "broadcast"
         if resolved_cross_pod == "reshard" and built["broadcast_stats"]:
-            rebuilt = _plan_once(root, catalog, num_shards, cfg, reshard=True)
+            rebuilt = build(reshard=True)
             # joins whose schemas carry float columns keep their broadcast
             # edge (can_reshard=False); only re-tune if anything changed
             if rebuilt["broadcast_stats"] != built["broadcast_stats"]:
@@ -260,6 +295,11 @@ def _plan_once(
     num_shards: int,
     cfg: PlannerConfig,
     reshard: bool,
+    num_pods: int = 1,
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+    stats: dict[str, S.TableProfile] | None = None,
+    salt_threshold: float = DEFAULT_SALT_THRESHOLD,
 ) -> dict:
     """One planning pass; ``reshard=True`` turns broadcast-threshold joins
     into co-partitioned ones (the two-level reshard strategy)."""
@@ -268,6 +308,76 @@ def _plan_once(
     memo: dict[int, PNode] = {}
     exch_memo: dict[tuple[int, str, str | None], PNode] = {}
     scans: list[str] = []
+    # column name -> ColumnStats; TPC-H column names are globally unique,
+    # and the deterministic sorted-table iteration pins any tie.
+    stats_by_col: dict[str, S.ColumnStats] = {}
+    profiles: dict[str, S.TableProfile] = dict(stats) if stats else {}
+    for _tname in sorted(profiles):
+        for _cname, _cs in profiles[_tname].columns.items():
+            stats_by_col.setdefault(_cname, _cs)
+    # id(PNode) -> estimated total valid rows (refines capacity for the
+    # per-edge pricing; capacities still size every buffer)
+    est: dict[int, float] = {}
+
+    def _est(p: PNode, default: float | None = None) -> float:
+        if default is None:
+            default = float(p.cap * num_shards)
+        return est.get(id(p), default)
+
+    def _selectivity(pred: L.Expr) -> float:
+        cols = set(pred.columns())
+        for tname in sorted(profiles):
+            sample = profiles[tname].sample
+            if cols <= set(sample):
+                return L.predicate_selectivity(pred, sample)
+        return 1.0
+
+    def _salt_decision(child: PNode, key: str) -> dict | None:
+        """Price plain vs salted vs broadcast for this shuffle edge; a dict
+        of salted-exchange info when the salted repartitioning wins."""
+        cs = stats_by_col.get(key)
+        if cs is None or num_shards <= 1:
+            return None
+        heavy = S.salting_keys(cs, num_shards)
+        num_salts = S.choose_num_salts(heavy, num_shards)
+        if not heavy or not num_salts:
+            return None
+        over_plain = S.partition_overload(cs.heavy_hitters, num_shards)
+        over_salted = S.partition_overload(
+            cs.heavy_hitters, num_shards, num_salts=num_salts, salted=heavy
+        )
+        if over_plain < salt_threshold:
+            return None
+        # Price the three physical alternatives on the ESTIMATED rows (the
+        # real TableStats), with the makespan charged to the max-loaded
+        # shard via the skew factor.
+        rows_ps = max(1, math.ceil(_est(child) / num_shards))
+        pstats = TableStats(rows=rows_ps, row_bytes=4 * len(child.schema))
+        n_inner = num_shards // max(num_pods, 1)
+        priced = {
+            "plain": exchange_makespan(
+                pstats, n_inner, chip=chip, topology=topology,
+                num_pods=num_pods, skew=over_plain,
+            ),
+            "salted": exchange_makespan(
+                pstats, n_inner, chip=chip, topology=topology,
+                num_pods=num_pods, skew=over_salted,
+            ),
+            "broadcast": pod_strategy_times(
+                pstats, n_inner, num_pods, chip=chip, topology=topology
+            )["broadcast"],
+        }
+        if priced["salted"] >= priced["plain"]:
+            return None
+        return {
+            "salted": True,
+            "num_salts": num_salts,
+            "heavy_keys": tuple(int(k) for k in heavy),
+            "overload_plain": over_plain,
+            "overload_salted": over_salted,
+            "priced_s": priced,
+            "runtime_threshold": salt_threshold,
+        }
 
     def exchange(child: PNode, exkind: str, key: str | None) -> PNode:
         mkey = (id(child), exkind, key)
@@ -280,12 +390,18 @@ def _plan_once(
                 "row image — aggregate after the exchange, or project the "
                 "float columns away first"
             )
-        stats = TableStats(rows=child.cap, row_bytes=4 * len(child.schema))
+        stats_t = TableStats(rows=child.cap, row_bytes=4 * len(child.schema))
+        info = {"exkind": exkind, "key": key, "stats": stats_t}
         if exkind == "shuffle":
-            shuffle_stats.append(stats)
-            part = ("hash", key)
+            shuffle_stats.append(stats_t)
+            salt = _salt_decision(child, key)
+            if salt:
+                info.update(salt)
+                part = ("salted", key)
+            else:
+                part = ("hash", key)
         else:
-            broadcast_stats.append(stats)
+            broadcast_stats.append(stats_t)
             part = REPLICATED
         node = PNode(
             kind="exchange",
@@ -294,16 +410,20 @@ def _plan_once(
             cap=child.cap * num_shards,
             part=part,
             children=(child,),
-            info={"exkind": exkind, "key": key, "stats": stats},
+            info=info,
             float_cols=child.float_cols,
         )
+        est[id(node)] = _est(child)
         exch_memo[mkey] = node
         return node
 
     def ensure_hash(p: PNode, key: str) -> PNode:
         # REPLICATED is acceptable for join sides: valid matches still land
-        # exactly once globally (the other copies fail the key-owner test)
-        if p.part == ("hash", key) or p.part == REPLICATED:
+        # exactly once globally (the other copies fail the key-owner test).
+        # A salted partitioning on the same key is the adaptive equivalent
+        # of hash(key); consumers that need co-location by the TRUE key
+        # (sort-based GroupBy, join sides) handle it explicitly below.
+        if p.part in (("hash", key), ("salted", key), REPLICATED):
             return p
         return exchange(p, "shuffle", key)
 
@@ -334,10 +454,15 @@ def _plan_once(
                 children=(),
                 info={"table": node.table},
             )
+            prof = profiles.get(node.table)
+            est[id(p)] = float(
+                prof.rows if prof else node.est_rows(catalog)
+            )
         elif isinstance(node, L.Filter):
             c = plan(node.child)
             p = PNode("filter", c.schema, c.cap, c.part, (c,),
                       {"pred": node.pred}, float_cols=c.float_cols)
+            est[id(p)] = _est(c) * (_selectivity(node.pred) if profiles else 1.0)
         elif isinstance(node, L.Project):
             c = plan(node.child)
             fcols = frozenset(
@@ -348,6 +473,7 @@ def _plan_once(
             p = PNode("project", node.schema, c.cap, c.part, (c,),
                       {"keep": node.keep, "derived": node.derived},
                       float_cols=fcols)
+            est[id(p)] = _est(c)
         elif isinstance(node, L.HashJoin):
             b, pr = plan(node.build), plan(node.probe)
             build_rows = node.build.est_rows(catalog)
@@ -377,15 +503,28 @@ def _plan_once(
             if strategy == "broadcast" and not resharded:
                 if b.part != REPLICATED:
                     b = exchange(b, "broadcast", node.build_key)
+                out_part = pr.part
             else:
                 b = ensure_hash(b, node.build_key)
                 pr = ensure_hash(pr, node.probe_key)
+                out_part = ("hash", node.probe_key)
+                # Under a salted repartitioning one heavy key's probe rows
+                # span shards, so a co-partitioned build cannot meet them —
+                # the build side must be replicated (the salted-join rule:
+                # probe salts, build replicates across all salts).
+                if pr.part == ("salted", node.probe_key):
+                    out_part = pr.part
+                    if b.part != REPLICATED:
+                        b = exchange(b, "broadcast", node.build_key)
+                        forced = "salted probe needs a replicated build"
+                elif b.part == ("salted", node.build_key):
+                    b = exchange(b, "broadcast", node.build_key)
+                    forced = "salted build side must replicate"
             p = PNode(
                 "join",
                 node.schema,
                 pr.cap,
-                pr.part if (strategy == "broadcast" and not resharded)
-                else ("hash", node.probe_key),
+                out_part,
                 (b, pr),
                 {
                     "build_key": node.build_key,
@@ -404,20 +543,44 @@ def _plan_once(
                     c for c in node.payload if c in b.float_cols
                 ),
             )
+            est[id(p)] = _est(pr)
         elif isinstance(node, L.GroupBy) and node.num_groups is None:
             c = reject_replicated(plan(node.child), "sort-based GroupBy")
             c = ensure_hash(c, node.key)
-            p = PNode(
-                "groupby_sorted",
-                node.schema,
-                c.cap,
-                ("hash", node.key),
-                (c,),
-                {"key": node.key, "aggs": node.aggs},
-                float_cols=frozenset(
-                    name for name, _e, kind in node.aggs if kind == "sum"
-                ),
+            sum_cols = frozenset(
+                name for name, _e, kind in node.aggs if kind == "sum"
             )
+            if c.part == ("salted", node.key):
+                # Salted shape (Fig 6c adapted to skew): aggregate per
+                # salted sub-stream by the TRUE key, broadcast the small
+                # partial-aggregate tables, and merge them everywhere by
+                # summing partial sums AND partial counts — the replicated
+                # result feeds join builds with no further exchange.
+                partial = PNode(
+                    "groupby_sorted", node.schema, c.cap, c.part, (c,),
+                    {"key": node.key, "aggs": node.aggs, "partial": True},
+                    float_cols=sum_cols,
+                )
+                est[id(partial)] = _est(c)
+                bc = exchange(partial, "broadcast", node.key)
+                p = PNode(
+                    "groupby_combine", node.schema, bc.cap, REPLICATED, (bc,),
+                    {"key": node.key, "aggs": node.aggs},
+                    # every aggregate is re-summed in f32 by the combine
+                    float_cols=frozenset(n for n, _e, _k in node.aggs),
+                )
+            else:
+                p = PNode(
+                    "groupby_sorted",
+                    node.schema,
+                    c.cap,
+                    ("hash", node.key),
+                    (c,),
+                    {"key": node.key, "aggs": node.aggs},
+                    float_cols=sum_cols,
+                )
+            cs = stats_by_col.get(node.key)
+            est[id(p)] = min(_est(c), float(cs.ndv)) if cs else _est(c)
         elif isinstance(node, L.GroupBy):
             c = reject_replicated(plan(node.child), "dense GroupBy")
             assert use_preaggregation(node.num_groups, c.cap), (
@@ -487,6 +650,8 @@ def _part_str(part) -> str:
         return "round-robin"
     if part == REPLICATED:
         return "replicated"
+    if part[0] == "salted":
+        return f"salted-hash({part[1]})"
     return f"hash({part[1]})"
 
 
@@ -502,10 +667,24 @@ def _node_line(n: PNode) -> str:
         d = f"Project[{','.join(n.info['keep'])}{derived}]"
     elif n.kind == "exchange":
         st: TableStats = n.info["stats"]
-        d = (
-            f"Exchange[{n.info['exkind']} by {n.info['key']}] "
-            f"rows/shard={st.rows} row_bytes={st.row_bytes}"
-        )
+        if n.info.get("salted"):
+            pr = n.info["priced_s"]
+            d = (
+                f"Exchange[shuffle by {n.info['key']}, "
+                f"salted x{n.info['num_salts']} over "
+                f"{len(n.info['heavy_keys'])} heavy] "
+                f"rows/shard={st.rows} row_bytes={st.row_bytes} "
+                f"overload {n.info['overload_plain']:.2f}->"
+                f"{n.info['overload_salted']:.2f} "
+                f"priced/s plain={pr['plain']:.2e} "
+                f"salted={pr['salted']:.2e} "
+                f"broadcast={pr['broadcast']:.2e}"
+            )
+        else:
+            d = (
+                f"Exchange[{n.info['exkind']} by {n.info['key']}] "
+                f"rows/shard={st.rows} row_bytes={st.row_bytes}"
+            )
     elif n.kind == "join":
         i = n.info
         ratio = (
@@ -524,7 +703,17 @@ def _node_line(n: PNode) -> str:
         if i["payload"]:
             d += f" payload={','.join(i['payload'])}"
     elif n.kind == "groupby_sorted":
-        d = f"GroupBy[{n.info['key']}: {_aggs_str(n.info['aggs'])}] sort-based"
+        partial = " partial-per-salt" if n.info.get("partial") else ""
+        d = (
+            f"GroupBy[{n.info['key']}: {_aggs_str(n.info['aggs'])}] "
+            f"sort-based{partial}"
+        )
+    elif n.kind == "groupby_combine":
+        d = (
+            f"GroupByCombine[{n.info['key']}: "
+            f"{_aggs_str(n.info['aggs'])}] replicated merge of salted "
+            "partials"
+        )
     elif n.kind == "groupby_dense":
         d = (
             f"GroupBy[{n.info['key_expr'].render()} -> "
@@ -592,4 +781,5 @@ __all__ = [
     "plan_physical",
     "explain",
     "REPLICATED",
+    "DEFAULT_SALT_THRESHOLD",
 ]

@@ -57,10 +57,11 @@ class PlannedQuery:
         num_pods: int = 1,
         cfg: PlannerConfig | None = None,
         cross_pod: str | None = None,
+        stats: dict | None = None,
     ) -> PhysicalPlan:
         return plan_physical(
             self.logical, catalog, num_shards, num_pods=num_pods, cfg=cfg,
-            name=self.name, cross_pod=cross_pod,
+            name=self.name, cross_pod=cross_pod, stats=stats,
         )
 
 
@@ -74,11 +75,22 @@ def run_query(
     num_chunks: int | None = None,
     cross_pod: str | None = None,
     cfg: PlannerConfig | None = None,
+    stats: dict | None = None,
 ):
-    """Plan against the actual table capacities, execute, finalize."""
+    """Plan against the actual table capacities, execute, finalize.
+
+    ``stats="collect"`` profiles the actual input tables first
+    (:func:`repro.relational.stats.collect_stats`) so the planner can react
+    to skew; a profile dict passes through as-is; None keeps static plans.
+    """
+    if stats == "collect":
+        from .. import stats as rstats
+
+        stats = rstats.collect_stats({t: tables[t] for t in pq.tables})
     catalog = {t: tables[t].capacity for t in pq.tables}
     phys = pq.plan(
-        catalog, num_shards, num_pods=num_pods, cfg=cfg, cross_pod=cross_pod
+        catalog, num_shards, num_pods=num_pods, cfg=cfg,
+        cross_pod=cross_pod, stats=stats,
     )
     raw = execute_plan(
         phys, tables, impl=impl, pack_impl=pack_impl, num_chunks=num_chunks
@@ -92,8 +104,11 @@ def explain_query(
     num_shards: int,
     num_pods: int = 1,
     cfg: PlannerConfig | None = None,
+    stats: dict | None = None,
 ) -> str:
-    return pq.plan(catalog, num_shards, num_pods=num_pods, cfg=cfg).explain()
+    return pq.plan(
+        catalog, num_shards, num_pods=num_pods, cfg=cfg, stats=stats
+    ).explain()
 
 
 def tpch_catalog(sf: float) -> dict[str, int]:

@@ -691,6 +691,75 @@ def scenario_tpch_pack_equiv():
     print("PASS tpch_pack_equiv")
 
 
+def scenario_skewed_q17():
+    """The adaptive-optimizer acceptance scenario (paper §3.1): Zipf(1.2)
+    ``l_partkey`` over 8 shards.  Stats flip Q17's shared lineitem shuffle
+    to the salted repartitioning; the executor measures per-shard load at
+    the exchange and reports it.  Asserts: salted matches the oracle with
+    zero drops, the measured max/fair-share of the salted route stays
+    strictly below the unsalted one (< 1.3 vs > 2), and uniform data
+    through the SAME salted plan keeps the plain route (runtime gate)."""
+    from repro.relational import datagen, oracle
+    from repro.relational import stats as rstats
+    from repro.relational.planner import executor, tpch
+
+    tabs = datagen.gen_all(0.01, zipf_partkey=1.2)
+    # brand/container of partkey 0, the heaviest Zipf key (~22% of rows):
+    # the semi-join keeps it, so the shuffle actually sees the skew
+    pq = tpch.q17(brand=11, container=25)
+    want = oracle.q17_oracle(tabs["lineitem"], tabs["part"], 11, 25)
+    assert want > 0
+    catalog = {t: tabs[t].capacity for t in pq.tables}
+    stats = rstats.collect_stats({t: tabs[t] for t in pq.tables})
+
+    salted_plan = pq.plan(catalog, 8, stats=stats)
+    assert "salted x" in salted_plan.explain()
+    run = executor.compile_plan(salted_plan, tabs)
+    got = pq.finalize(run())  # compile_plan raises on any dropped row
+    np.testing.assert_allclose(float(got), want, rtol=1e-3)
+    (rep,) = run.exchange_report.values()
+    assert bool(rep["salted"])
+    plain_over = float(rep["plain_overload"])
+    salted_over = float(rep["overload"])
+    assert plain_over > 2.0, plain_over
+    assert salted_over < 1.3, salted_over
+    assert salted_over < plain_over
+
+    # the static plan routes plain and eats the full overload
+    run0 = executor.compile_plan(pq.plan(catalog, 8), tabs)
+    got0 = pq.finalize(run0())
+    np.testing.assert_allclose(float(got0), want, rtol=1e-3)
+    (rep0,) = run0.exchange_report.values()
+    assert float(rep0["overload"]) == plain_over
+
+    # runtime gate: a salted PLAN on balanced data keeps the plain route.
+    # Q17's shuffle sits behind the semi-join (2 surviving keys are
+    # legitimately imbalanced even uniform), so the gate is shown on
+    # Q18's scan-fed group-by exchange instead: plan from Zipf orderkeys,
+    # execute on uniform ones.
+    pq18 = tpch.q18()
+    z18 = datagen.gen_all(0.01, zipf_orderkey=1.5)
+    cat18 = {t: z18[t].capacity for t in pq18.tables}
+    plan18 = pq18.plan(
+        cat18, 8, stats=rstats.collect_stats({t: z18[t] for t in pq18.tables})
+    )
+    assert "salted x" in plan18.explain()
+    uni = datagen.gen_all(0.01)
+    run_u = executor.compile_plan(plan18, uni)
+    got_u = pq18.finalize(run_u())
+    want_u = oracle.q18_oracle(uni["lineitem"], uni["orders"], uni["customer"])
+    for k in want_u:
+        np.testing.assert_allclose(
+            np.asarray(got_u[k]), np.asarray(want_u[k]), rtol=1e-3
+        )
+    rep_u = next(
+        r for k, r in run_u.exchange_report.items() if "l_orderkey" in k
+    )
+    assert not bool(rep_u["salted"])
+    assert float(rep_u["plain_overload"]) < 1.5
+    print("PASS skewed_q17")
+
+
 SCENARIOS = {
     name.removeprefix("scenario_"): fn
     for name, fn in list(globals().items())

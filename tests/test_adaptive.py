@@ -1,0 +1,175 @@
+"""Adaptive (stats-driven) planning: flip tests, goldens, runtime gate.
+
+The contract under test, end to end:
+
+* UNIFORM data: profiling finds no heavy hitters, so plans built WITH
+  stats are bit-identical to the static plans (the existing goldens) —
+  the adaptive layer is provably inert when data is balanced;
+* ZIPF data: the profile flips Q17 (zipf ``l_partkey``) and Q18 (zipf
+  ``l_orderkey``) to the salted-repartition shape, snapshotted under
+  ``tests/golden_plans/q17_salted.txt`` / ``q18_salted.txt`` (regenerate
+  with ``REPRO_UPDATE_GOLDEN=1``, same mechanism as test_planner.py);
+* the salted plan computes the same answer as the numpy oracle on a
+  single device (8-device runs: ``tests/_multidev_driver.py``
+  ``skewed_q17``);
+* the skew-aware makespan extension prices the max-loaded shard and is
+  bit-identical to the old model at ``skew=1``.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.autotune import TableStats, exchange_makespan
+from repro.relational import datagen, oracle
+from repro.relational import stats as rstats
+from repro.relational.planner import tpch
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden_plans")
+
+
+@pytest.fixture(scope="module")
+def uniform_tables():
+    return datagen.gen_all(0.01)
+
+
+@pytest.fixture(scope="module")
+def zipf_tables():
+    # zipf_partkey=1.2: the acceptance scenario (22% of lineitem on one
+    # part); zipf_orderkey=1.5 pushes l_orderkey's top key past a fair
+    # share at 8 shards so Q18's group-by exchange flips too.
+    return datagen.gen_all(0.01, zipf_partkey=1.2, zipf_orderkey=1.5)
+
+
+def _stats_for(pq, tables):
+    return rstats.collect_stats({t: tables[t] for t in pq.tables})
+
+
+def _catalog(pq, tables):
+    return {t: tables[t].capacity for t in pq.tables}
+
+
+# ---------------------------------------------------------------------------
+# Uniform stats leave every plan bit-identical to the static goldens.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("query", ["q3", "q4", "q12", "q17", "q18"])
+def test_uniform_stats_keep_static_plans(query, uniform_tables):
+    pq = tpch.ALL_QUERIES[query]()
+    text = tpch.explain_query(
+        pq, tpch.tpch_catalog(0.01), 8,
+        stats=_stats_for(pq, uniform_tables),
+    )
+    with open(os.path.join(GOLDEN_DIR, f"{query}.txt")) as f:
+        assert text == f.read(), (
+            f"uniform-data stats changed the {query} plan — the adaptive "
+            "layer must be inert without heavy hitters"
+        )
+
+
+def test_uniform_profile_has_no_heavy_hitters(uniform_tables):
+    prof = rstats.profile_table("lineitem", uniform_tables["lineitem"])
+    assert prof.columns["l_partkey"].heavy_hitters == ()
+    assert prof.columns["l_orderkey"].heavy_hitters == ()
+
+
+# ---------------------------------------------------------------------------
+# Zipf stats flip Q17/Q18 to the salted shape (golden snapshots).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fname,query", [
+    ("q17_salted", "q17"),
+    ("q18_salted", "q18"),
+])
+def test_zipf_stats_flip_to_salted_golden(fname, query, zipf_tables):
+    pq = tpch.ALL_QUERIES[query]()
+    text = tpch.explain_query(
+        pq, _catalog(pq, zipf_tables), 8, stats=_stats_for(pq, zipf_tables)
+    )
+    assert "salted x" in text and "GroupByCombine" in text
+    path = os.path.join(GOLDEN_DIR, f"{fname}.txt")
+    if os.environ.get("REPRO_UPDATE_GOLDEN"):
+        with open(path, "w") as f:
+            f.write(text)
+    with open(path) as f:
+        want = f.read()
+    assert text == want, (
+        f"salted explain({query}) drifted from tests/golden_plans/{fname}.txt"
+        " — if intended, regenerate with REPRO_UPDATE_GOLDEN=1"
+    )
+
+
+def test_zipf_profile_finds_the_planted_skew(zipf_tables):
+    prof = rstats.profile_table("lineitem", zipf_tables["lineitem"])
+    cs = prof.columns["l_partkey"]
+    # key 0 carries ~22% of rows at z=1.2 over the 2000-part domain
+    assert cs.heavy_hitters[0][0] == 0
+    assert 0.15 < cs.max_share < 0.30
+    over = rstats.partition_overload(cs.heavy_hitters, 8)
+    assert over > 2.0  # the imbalance the plain exchange would eat
+    heavy = rstats.salting_keys(cs, 8)
+    salts = rstats.choose_num_salts(heavy, 8)
+    assert rstats.partition_overload(
+        cs.heavy_hitters, 8, num_salts=salts, salted=heavy
+    ) < 1.3
+
+
+def test_orders_side_stays_plain_under_zipf(zipf_tables):
+    """o_orderkey is a key column (arange, never heavy): Q18's orders
+    shuffle must stay a plain hash even when lineitem flips."""
+    pq = tpch.q18()
+    text = tpch.explain_query(
+        pq, _catalog(pq, zipf_tables), 8, stats=_stats_for(pq, zipf_tables)
+    )
+    assert "shuffle by o_orderkey]" in text  # no salted suffix on that edge
+
+
+# ---------------------------------------------------------------------------
+# Salted plans compute the oracle answer (single device; 8-dev: multidev).
+# ---------------------------------------------------------------------------
+
+def test_salted_q17_matches_oracle_single_device(zipf_tables):
+    pq = tpch.q17(brand=11, container=25)  # selects the heaviest part
+    got = float(tpch.run_query(pq, zipf_tables, num_shards=1, stats="collect"))
+    want = oracle.q17_oracle(
+        zipf_tables["lineitem"], zipf_tables["part"], 11, 25
+    )
+    assert want > 0  # scenario must exercise real revenue
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_salted_q18_matches_oracle_single_device(zipf_tables):
+    pq = tpch.q18()
+    got = tpch.run_query(pq, zipf_tables, num_shards=1, stats="collect")
+    want = oracle.q18_oracle(
+        zipf_tables["lineitem"], zipf_tables["orders"], zipf_tables["customer"]
+    )
+    assert len(want["o_orderkey"])  # threshold still hit under zipf
+    for k in want:
+        np.testing.assert_allclose(
+            np.asarray(got[k]), np.asarray(want[k]), rtol=1e-3
+        )
+
+
+# ---------------------------------------------------------------------------
+# Skew-aware makespan: prices the max-loaded shard.
+# ---------------------------------------------------------------------------
+
+def test_makespan_skew_one_is_identity():
+    st = TableStats(rows=10_000, row_bytes=16)
+    assert exchange_makespan(st, 8) == exchange_makespan(st, 8, skew=1.0)
+
+
+def test_makespan_monotone_in_skew():
+    st = TableStats(rows=10_000, row_bytes=16)
+    times = [exchange_makespan(st, 8, skew=s) for s in (1.0, 1.5, 2.0, 4.0)]
+    assert times == sorted(times) and times[0] < times[-1]
+    # two-level: the skewed shard also stalls the cross-pod hop
+    t2 = [exchange_makespan(st, 4, num_pods=2, skew=s) for s in (1.0, 3.0)]
+    assert t2[0] < t2[1]
+
+
+def test_makespan_rejects_sub_unit_skew():
+    with pytest.raises(ValueError, match="skew"):
+        exchange_makespan(TableStats(rows=100, row_bytes=8), 8, skew=0.5)

@@ -29,6 +29,7 @@ SCENARIOS = [
     "tpch_pod_mesh_1proc",
     "decode_sharded_equiv",
     "serve_continuous_ep",
+    "skewed_q17",
 ]
 
 

@@ -27,6 +27,7 @@ SCENARIOS = [
     "tuner_dci_aware",
     "tpch_pod_mesh",
     "ep_dispatch_two_level",
+    "salted_pod_shuffle",
 ]
 
 _PROBE = """

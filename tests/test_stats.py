@@ -1,0 +1,213 @@
+"""Property tests for the estimation layer behind the adaptive planner.
+
+Mirrors ``test_properties.py``: hypothesis is an optional test extra and the
+module skips cleanly without it.  The properties pinned here are the ones
+the planner's salting decision leans on:
+
+* NDV estimates are exact when the sample covers the table and bounded
+  otherwise (never below the observed distinct count, never above the
+  row count);
+* the SpaceSaving sketch NEVER misses a key whose true frequency exceeds
+  ``n / capacity`` (the classic guarantee), and its guaranteed counts
+  (``count - error``) never exceed true frequencies — so uniform data can
+  never fabricate a heavy hitter;
+* ``salt_keys`` round-trips through ``unsalt_keys`` for arbitrary uint64
+  keys, and refuses the inputs the historical int64 version silently
+  corrupted (negative keys, shifted values past 2**64);
+* ``partition_overload`` estimates track a direct simulation of the
+  runtime routing hash.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test extra")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import skew
+from repro.relational import stats as S
+
+
+# ---------------------------------------------------------------------------
+# NDV estimation.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 500), st.integers(0, 2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_ndv_exact_on_full_sample(n, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, max(n // 2, 1), n)
+    # sample == table: the unseen-species term must vanish
+    assert S.estimate_ndv(vals, n) == len(np.unique(vals))
+
+
+@given(
+    st.integers(2_000, 20_000),  # table rows
+    st.integers(10, 2_000),      # key domain
+    st.sampled_from([None, 1.1, 1.5]),  # uniform or Zipf exponent
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_ndv_bounded_on_subsample(rows, domain, z, seed):
+    rng = np.random.default_rng(seed)
+    if z is None:
+        vals = rng.integers(0, domain, rows)
+    else:
+        pmf = np.arange(1, domain + 1, dtype=np.float64) ** -z
+        vals = rng.choice(domain, size=rows, p=pmf / pmf.sum())
+    sample = rng.choice(vals, size=1024, replace=False)
+    est = S.estimate_ndv(sample, rows)
+    true_ndv = len(np.unique(vals))
+    seen = len(np.unique(sample))
+    assert seen <= est <= rows      # hard bounds, always
+    # GEE's ratio-error guarantee: within sqrt(rows / sample) of truth
+    # (small slack for the randomness of one concrete sample)
+    bound = 1.5 * np.sqrt(rows / sample.size)
+    assert est <= bound * true_ndv
+    assert est >= true_ndv / bound
+
+
+# ---------------------------------------------------------------------------
+# Selectivity estimation runs the SAME Expr.eval the executor runs.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(1, 300), st.integers(0, 100), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_selectivity_exact_on_full_sample(n, cut, seed):
+    from repro.relational.planner import logical as L
+
+    rng = np.random.default_rng(seed)
+    sample = {"x": rng.integers(0, 100, n).astype(np.int32)}
+    got = L.predicate_selectivity(L.col("x") < L.lit(cut), sample)
+    assert got == pytest.approx(float((sample["x"] < cut).mean()))
+
+
+# ---------------------------------------------------------------------------
+# SpaceSaving: the no-miss guarantee and the no-phantom guarantee.
+# ---------------------------------------------------------------------------
+
+@given(
+    st.integers(4, 16),          # sketch capacity
+    st.integers(100, 3_000),     # stream length
+    st.floats(1.05, 2.0),        # Zipf exponent
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_sketch_never_misses_heavy_keys(cap, n, z, seed):
+    rng = np.random.default_rng(seed)
+    domain = 500
+    pmf = np.arange(1, domain + 1, dtype=np.float64) ** -z
+    stream = rng.choice(domain, size=n, p=pmf / pmf.sum())
+    sk = S.SpaceSaving(cap)
+    sk.update_many(stream.tolist())
+    in_sketch = {k for k, _, _ in sk.entries()}
+    counts = np.bincount(stream, minlength=domain)
+    for key in np.flatnonzero(counts > n / cap):
+        assert int(key) in in_sketch, (
+            f"key {key} (freq {counts[key]}/{n} > n/capacity) missing"
+        )
+
+
+@given(st.integers(2, 16), st.integers(50, 2_000), st.integers(0, 2**31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_sketch_guaranteed_counts_never_exceed_truth(cap, n, seed):
+    rng = np.random.default_rng(seed)
+    stream = rng.integers(0, 200, n)  # uniform: the phantom-heavy-hitter case
+    sk = S.SpaceSaving(cap)
+    sk.update_many(stream.tolist())
+    counts = np.bincount(stream, minlength=200)
+    for key, c, err in sk.entries():
+        assert c - err <= counts[key] <= c  # guaranteed <= true <= estimate
+
+
+def test_uniform_data_yields_no_heavy_hitters():
+    """The planner-facing regression: count inheritance alone must not
+    promote a uniform key to heavy (it did, before error tracking)."""
+    rng = np.random.default_rng(7)
+    cs = S._profile_column("k", rng.integers(0, 10_000, 2048), 100_000)
+    assert cs.heavy_hitters == ()
+
+
+# ---------------------------------------------------------------------------
+# salt_keys round-trip and the uint64/int64 overflow bug class.
+# ---------------------------------------------------------------------------
+
+@given(
+    st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=64),
+    st.integers(1, 512),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=50, deadline=None)
+def test_salt_keys_round_trip_or_reject(keys, num_salts, seed):
+    keys = np.asarray(keys, dtype=np.uint64)
+    heavy = keys[:: max(len(keys) // 3, 1)]
+    if num_salts > 1 and int(keys.max()) >= 2**64 // num_salts:
+        with pytest.raises(ValueError, match="overflow"):
+            skew.salt_keys(keys, heavy, num_salts, seed=seed)
+        return
+    salted = skew.salt_keys(keys, heavy, num_salts, seed=seed)
+    assert salted.dtype == np.uint64
+    np.testing.assert_array_equal(skew.unsalt_keys(salted, num_salts), keys)
+    # non-heavy keys shift deterministically; heavy sub-keys stay in-range
+    non_heavy = ~np.isin(keys, heavy)
+    np.testing.assert_array_equal(
+        salted[non_heavy], keys[non_heavy] * np.uint64(num_salts)
+    )
+    assert (salted - keys * np.uint64(num_salts) < num_salts).all()
+
+
+def test_salt_keys_rejects_negative_keys():
+    """int64 -1 casts to 2**64 - 1: salting it silently aliased the largest
+    uint64 key.  Now it raises."""
+    with pytest.raises(ValueError, match="negative"):
+        skew.salt_keys(np.asarray([3, -1], np.int64), [3], 4)
+
+
+def test_salt_keys_rejects_uint64_shift_overflow():
+    with pytest.raises(ValueError, match="overflow"):
+        skew.salt_keys(np.asarray([2**63], np.uint64), [], 4)
+
+
+def test_partition_overload_handles_huge_uint64_keys():
+    """Regression for the np.bincount-refuses-uint64 path: heavy keys near
+    2**32 (post-hash values are 32-bit) must not crash or go negative."""
+    heavy = [(2**32 - 1, 0.5), (2**31 + 17, 0.3)]
+    over = S.partition_overload(heavy, 8)
+    assert 1.0 <= over <= 8.0
+    salted = S.partition_overload(heavy, 8, num_salts=512,
+                                  salted=[k for k, _ in heavy])
+    assert salted < over
+
+
+# ---------------------------------------------------------------------------
+# partition_overload tracks a direct routing simulation.
+# ---------------------------------------------------------------------------
+
+@given(st.integers(2, 16), st.floats(1.1, 1.6), st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_overload_estimate_tracks_simulation(shards, z, seed):
+    rng = np.random.default_rng(seed)
+    domain, n = 1000, 30_000
+    pmf = np.arange(1, domain + 1, dtype=np.float64) ** -z
+    keys = rng.choice(domain, size=n, p=pmf / pmf.sum())
+    # the true overload, routed exactly like the executor routes
+    dest = (S.fib_hash32(keys) % np.uint64(shards)).astype(np.int64)
+    true_over = np.bincount(dest, minlength=shards).max() * shards / n
+    # the estimate, from an exact heavy-hitter profile
+    counts = np.bincount(keys, minlength=domain)
+    heavy = [(int(k), counts[k] / n) for k in np.argsort(-counts)[:32]
+             if counts[k] >= 4]
+    est = S.partition_overload(heavy, shards)
+    assert est == pytest.approx(true_over, rel=0.35)
+
+
+def test_fib_hash32_matches_runtime_hash():
+    """The planner's placement model must use the EXACT routing hash."""
+    import jax.numpy as jnp
+
+    from repro.kernels import ref as KR
+
+    keys = np.asarray([0, 1, 17, 2**31 - 1, 12345], np.int64)
+    want = np.asarray(KR.fibonacci_hash_ref(jnp.asarray(keys, jnp.int32)))
+    np.testing.assert_array_equal(S.fib_hash32(keys).astype(np.uint32), want)
