@@ -494,6 +494,63 @@ def tune_config(
     )
 
 
+def tune_shared_config(
+    n: int,
+    stats_groups: Sequence[TableStats | Sequence[TableStats]],
+    num_pods: int = 1,
+    chip: ChipSpec = V5E,
+    topology: str = "ring",
+    weights: Sequence[float] | None = None,
+) -> TunedConfig:
+    """One knob set for SEVERAL queries' exchanges sharing one multiplexer.
+
+    The query-serving engine runs compatible plans concurrently on one
+    mesh, and they all ride the same multiplexer — so the knobs must be
+    tuned over the UNION of every query's exchange shapes, not per query:
+    the legal candidate set is the intersection (``pipeline_chunks`` must
+    divide every exchange's rows across all queries) and the objective is
+    the traffic-weighted total makespan.  ``stats_groups`` holds one group
+    of :class:`TableStats` per query (a plan's ``shuffle_stats``);
+    ``weights`` optionally scales each query's contribution by its share
+    of the request mix (default: uniform).  Degenerate inputs (single
+    unit, no exchanges) collapse to :func:`tune_config`'s default exactly.
+    """
+    groups = tuple(
+        (g,) if isinstance(g, TableStats) else tuple(g) for g in stats_groups
+    )
+    flat = tuple(s for g in groups for s in g)
+    if n <= 1 or not flat or all(s.rows == 0 for s in flat):
+        return tune_config(n, flat, num_pods, chip, topology)
+    if weights is None:
+        weights = (1.0,) * len(groups)
+    assert len(weights) == len(groups), (len(weights), len(groups))
+    scored = []
+    for impl, pack_impl, C, t in candidate_configs(n, flat):
+        total = sum(
+            w * sum(
+                exchange_makespan(
+                    s, n, impl, pack_impl, C, t, chip, topology, num_pods
+                )
+                for s in g
+            )
+            for w, g in zip(weights, groups)
+        )
+        scored.append((total, C, t, impl, pack_impl))
+    scored.sort(key=lambda r: (r[0], r[1], r[2], r[3], r[4]))
+    candidates = tuple(
+        (impl, pack_impl, C, t, total) for total, C, t, impl, pack_impl in scored
+    )
+    total, C, t, impl, pack_impl = scored[0]
+    return TunedConfig(
+        impl=impl,
+        pack_impl=pack_impl,
+        pipeline_chunks=C,
+        transport_chunks=t,
+        modeled_s=total,
+        candidates=candidates,
+    )
+
+
 def tune_multiplexer(
     mesh,
     table_stats: TableStats | Sequence[TableStats],
@@ -749,6 +806,7 @@ __all__ = [
     "pod_strategy_times",
     "candidate_configs",
     "tune_config",
+    "tune_shared_config",
     "tune_multiplexer",
     "measure_shuffle_config",
     "calibrate_chip",

@@ -22,6 +22,12 @@ per-query in ``relational/distributed.py``:
 ``planner.tpch`` expresses all nine TPC-H queries (Q1/Q3/Q4/Q6/Q12/Q14/
 Q17/Q18/Q19) as logical plans; ``relational/distributed.py``'s entry points
 are thin wrappers over it.
+
+:mod:`~repro.relational.planner.plan_cache` sits beside the three layers:
+a persistent plan + compile cache (canonical-DAG-render + stats-bucket +
+mesh-shape keys, pickled plan artifacts, in-process executor memo) so the
+query-serving engine's hot path never replans or retraces a repeated
+template.
 """
 
 from .logical import (
@@ -46,6 +52,13 @@ from .physical import (
     use_preaggregation,
 )
 from .executor import compile_plan, execute_plan
+from .plan_cache import (
+    PlanCache,
+    PlanKey,
+    canonical_render,
+    plan_key,
+    stats_bucket,
+)
 
 __all__ = [
     "Aggregate",
@@ -67,4 +80,9 @@ __all__ = [
     "use_preaggregation",
     "execute_plan",
     "compile_plan",
+    "PlanCache",
+    "PlanKey",
+    "canonical_render",
+    "plan_key",
+    "stats_bucket",
 ]

@@ -234,6 +234,35 @@ def _broadcast_table(
     return Table(cols, v), jnp.int32(0)
 
 
+def _report_keys(root: PNode) -> dict[int, str]:
+    """Stable per-edge keys for ``run.exchange_report``.
+
+    The display index (``PNode.idx``) renumbers whenever an unrelated part
+    of the plan changes shape — salting an edge inserts combine nodes,
+    reshard rebuilds a join — so a report keyed on it is NOT comparable
+    across plan variants, cached reloads, or replans of the same query.
+    Reports instead key on the shuffle's first-visit ordinal plus its key
+    column (``shuffle[l_partkey]#0``): a pure function of the shuffle edges
+    themselves, identical for cold, warm, and unpickled plans.
+    """
+    seen: set[int] = set()
+    order: list[PNode] = []
+
+    def walk(n: PNode):
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        if n.kind == "exchange" and n.info["exkind"] == "shuffle":
+            order.append(n)
+        for c in n.children:
+            walk(c)
+
+    walk(root)
+    return {
+        id(n): f"shuffle[{n.info['key']}]#{j}" for j, n in enumerate(order)
+    }
+
+
 def _raise_on_dropped(query: str, dropped) -> None:
     """Capacity overflow is an error, not silent row loss (paper: the message
     pool is sized so overflow cannot happen; if it does, results are wrong)."""
@@ -280,9 +309,24 @@ def compile_plan(
     impl: str = "auto",
     pack_impl: str | None = None,
     num_chunks: int | None = None,
+    mux: CommMultiplexer | None = None,
 ):
     """Build a zero-arg runner for the plan (jit object created once, so
-    repeated calls hit the compile cache — what the benchmarks time)."""
+    repeated calls hit the compile cache — what the benchmarks time).
+
+    ``mux`` injects a SHARED multiplexer instead of building the per-query
+    one: the query-serving engine tunes one knob set over every concurrent
+    plan's exchanges (:func:`repro.core.autotune.tune_shared_config`) and
+    passes it here, so compatible plans running together ride the same
+    tuned schedules.  The mux must have been built for this plan's mesh
+    shape; its knobs override the plan-time tuner's.
+
+    Beyond calling the runner directly, ``run.dispatch()`` /
+    ``run.finalize(out)`` split the call into an async dispatch (no host
+    sync) and the fetch+checks — the serving engine dispatches a whole
+    admission round before finalizing any of it, so concurrent queries
+    overlap on the XLA async runtime.
+    """
     num_shards, num_pods = plan.num_shards, plan.num_pods
     for name in plan.scans:
         if tables[name].capacity != plan.catalog[name]:
@@ -293,9 +337,11 @@ def compile_plan(
             )
     mesh = _mesh(num_shards, num_pods)
     axes = _axes(num_pods)
-    mux = _make_mux(mesh, plan, impl, pack_impl, num_chunks)
+    if mux is None:
+        mux = _make_mux(mesh, plan, impl, pack_impl, num_chunks)
     prepped = [_prep(tables[name], num_shards) for name in plan.scans]
     single = num_shards == 1 and num_pods == 1
+    report_keys = _report_keys(plan.root)
 
     def body(*flat):
         tabs = {
@@ -343,7 +389,7 @@ def compile_plan(
                         mux, t, n.info["key"], list(n.schema),
                         route_keys=route,
                     )
-                    reports[f"#{n.idx} {n.info['key']}"] = rep
+                    reports[report_keys[id(n)]] = rep
                 else:
                     out, d = _broadcast_table(mux, t, list(n.schema))
                 drops.append(d)
@@ -437,12 +483,24 @@ def compile_plan(
     )
     jfn = jax.jit(fn)
 
-    def run():
-        result, dropped, reports = jfn(*flat)
+    def dispatch():
+        """Launch the jitted program without waiting on the host — results
+        are live device values (XLA async dispatch)."""
+        return jfn(*flat)
+
+    def finalize(out):
+        """Fetch + check a ``dispatch()`` result: drop-count enforcement,
+        exchange report publication, host transfer of the result."""
+        result, dropped, reports = out
         _raise_on_dropped(plan.name, dropped)
         run.exchange_report = fetch(reports)
         return fetch(result)
 
+    def run():
+        return finalize(dispatch())
+
+    run.dispatch = dispatch
+    run.finalize = finalize
     run.exchange_report = {}
     return run
 
@@ -453,6 +511,7 @@ __all__ = [
     "_exchange_by_key",
     "_broadcast_table",
     "_raise_on_dropped",
+    "_report_keys",
     "_mesh",
     "_axes",
     "_prep",

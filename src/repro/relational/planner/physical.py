@@ -241,6 +241,9 @@ def plan_physical(
     strand it away from an un-partitioned probe, so the reshard strategy
     must pull the probe onto the same hash partitioning.
     """
+    # Counter hook: the plan+compile cache's regression tests assert the
+    # warm path plans ZERO times (tests/test_plan_cache.py).
+    plan_physical.calls += 1
     cfg = cfg or PlannerConfig(num_units=num_shards, hybrid=True)
 
     def build(reshard: bool) -> dict:
@@ -287,6 +290,11 @@ def plan_physical(
         cfg=cfg,
         catalog=dict(catalog),
     )
+
+
+# How many times the planner has run in this process — the cache layer's
+# zero-replan-on-warm-path assertions read (and tests reset) this.
+plan_physical.calls = 0
 
 
 def _plan_once(

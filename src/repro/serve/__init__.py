@@ -1,4 +1,5 @@
-"""Serving substrate: static + continuous batching engines over KV caches."""
+"""Serving substrate: static + continuous batching engines over KV caches,
+plus the multi-tenant query-serving engine over the relational planner."""
 
 from .engine import (
     ContinuousEngine,
@@ -10,6 +11,11 @@ from .engine import (
     make_mixed_workload,
     sample_token,
 )
+from .query_engine import (
+    QueryRequest,
+    QueryServeEngine,
+    make_query_mix,
+)
 
 __all__ = [
     "ServeEngine",
@@ -20,4 +26,7 @@ __all__ = [
     "generate_bucketed",
     "make_mixed_workload",
     "engine_record",
+    "QueryRequest",
+    "QueryServeEngine",
+    "make_query_mix",
 ]

@@ -760,6 +760,101 @@ def scenario_skewed_q17():
     print("PASS skewed_q17")
 
 
+def scenario_qserve_cached():
+    """The query-serving engine on the real 8-device mesh: all nine TPC-H
+    templates served cold then warm through one QueryServeEngine.  The
+    warm pass makes ZERO ``plan_physical`` calls (plan cache) and zero
+    retraces (executor memo), returns results bit-identical to the cold
+    pass, and spot-checked queries are bit-identical to a solo
+    ``compile_plan`` run sharing the engine's multiplexer.  The slot
+    invariant holds after every drain."""
+    from repro.relational import datagen
+    from repro.relational.planner import executor, tpch
+    from repro.relational.planner.physical import plan_physical
+    from repro.relational.planner.plan_cache import PlanCache
+    from repro.serve import QueryRequest, QueryServeEngine
+
+    tabs = datagen.gen_all(0.01)
+    templates = [make() for make in tpch.ALL_QUERIES.values()]
+    names = sorted({t for pq in templates for t in pq.tables})
+    tables = {name: tabs[name] for name in names}
+    engine = QueryServeEngine(
+        tables, num_shards=8, num_slots=3, cache=PlanCache(),
+        templates=templates,
+    )
+    cold = engine.serve([QueryRequest("t", pq) for pq in templates])
+    engine.alloc.check()
+    assert engine.alloc.num_free == 3 and not engine.alloc.live
+
+    before = plan_physical.calls
+    warm = engine.serve([QueryRequest("t", pq) for pq in templates])
+    assert plan_physical.calls == before, "warm path replanned"
+    assert all(r.plan_cache_hit and r.executor_cache_hit for r in warm)
+    engine.alloc.check()
+
+    def eq(a, b):
+        la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+        return len(la) == len(lb) and all(
+            np.array_equal(np.asarray(x), np.asarray(y))
+            for x, y in zip(la, lb)
+        )
+
+    by_name = {r.query.name: r.result for r in cold}
+    for r in warm:
+        assert eq(r.result, by_name[r.query.name]), r.query.name
+    # solo run, same mux: the engine changes scheduling, never bytes
+    for qname in ("q3", "q17"):
+        pq = next(p for p in templates if p.name == qname)
+        plan = pq.plan({t: tables[t].capacity for t in pq.tables}, 8)
+        run = executor.compile_plan(plan, tables, mux=engine._mux)
+        assert eq(pq.finalize(run()), by_name[qname]), qname
+    print("PASS qserve_cached")
+
+
+def scenario_exchange_report():
+    """Exchange reports are comparable across plan lifecycles: a cold Q3
+    run, a replanned run, and a run from an UNPICKLED cached plan emit
+    identical report keys (``shuffle[col]#ordinal``) AND identical values
+    on the 8-device mesh — the regression that display-index keys broke."""
+    import pickle
+
+    from repro.relational import datagen
+    from repro.relational.planner import executor, tpch
+
+    tabs = datagen.gen_all(0.01)
+    pq = tpch.q3()
+    tables = {t: tabs[t] for t in pq.tables}
+    catalog = {t: tables[t].capacity for t in pq.tables}
+
+    plan_cold = pq.plan(catalog, 8)
+    plan_re = pq.plan(catalog, 8)          # fresh replan, new identities
+    plan_disk = pickle.loads(pickle.dumps(plan_cold))  # cached reload
+
+    reports = []
+    results = []
+    for plan in (plan_cold, plan_re, plan_disk):
+        run = executor.compile_plan(plan, tables)
+        results.append(pq.finalize(run()))
+        reports.append(run.exchange_report)
+
+    base = reports[0]
+    assert set(base) == {"shuffle[o_orderkey]#0", "shuffle[l_orderkey]#1"}
+    for rep in reports[1:]:
+        assert list(rep) == list(base), (list(rep), list(base))
+        for k in base:
+            for field in base[k]:
+                np.testing.assert_array_equal(
+                    np.asarray(base[k][field]), np.asarray(rep[k][field]),
+                    err_msg=f"{k}.{field} differs across plan lifecycles",
+                )
+    for got in results[1:]:
+        for k in results[0]:
+            np.testing.assert_array_equal(
+                np.asarray(results[0][k]), np.asarray(got[k])
+            )
+    print("PASS exchange_report")
+
+
 SCENARIOS = {
     name.removeprefix("scenario_"): fn
     for name, fn in list(globals().items())

@@ -1,0 +1,116 @@
+"""``run.exchange_report`` keys: stable across plan variants and reloads.
+
+The report used to key edges on the PNode display index (``#5 l_partkey``),
+which renumbers whenever the planner changes the plan's SHAPE around an
+unchanged shuffle — salting inserts combine/merge nodes, so the very same
+``l_partkey`` shuffle is ``#5`` in the static Q17 plan but ``#7`` in the
+salted one, and a warm (cached) run's report could never be diffed against
+a cold one.  Keys are now the shuffle's key column plus its first-visit
+ordinal (``shuffle[l_partkey]#0``) — a pure function of the shuffle edges,
+identical for cold, warm, replanned, and unpickled plans.
+
+Runtime coverage at 8 shards (values, not just keys) lives in the
+``exchange_report`` scenario of ``tests/_multidev_driver.py``; at ``n=1``
+the single-device executor elides exchanges entirely, so the report must
+be EMPTY, not populated with degenerate entries.
+"""
+
+import pickle
+import re
+
+import numpy as np
+
+from repro.relational import datagen
+from repro.relational import stats as S
+from repro.relational.planner import tpch
+from repro.relational.planner.executor import _report_keys, compile_plan
+
+KEY_RE = re.compile(r"^shuffle\[\w+\]#\d+$")
+
+CATALOG_Q17 = {"lineitem": 480_000, "part": 2_000}
+
+
+def _skewed_stats():
+    """A synthetic l_partkey profile hot enough to flip Q17 to salted."""
+    cs = S.ColumnStats(
+        name="l_partkey", ndv=2_000,
+        heavy_hitters=((0, 0.25), (1, 0.05)), max_share=0.25,
+    )
+    prof = S.TableProfile(
+        table="lineitem", rows=480_000, sample_rows=1_024,
+        columns={"l_partkey": cs},
+        sample={"l_partkey": np.zeros(4, np.int64)},
+    )
+    return {"lineitem": prof}
+
+
+def test_keys_are_key_column_plus_ordinal():
+    pq = tpch.q3()
+    cat = tpch.tpch_catalog(0.08)
+    plan = pq.plan({t: cat[t] for t in pq.tables}, 8)
+    keys = list(_report_keys(plan.root).values())
+    assert keys, "q3 at 8 shards must have shuffle edges"
+    assert all(KEY_RE.match(k) for k in keys), keys
+    assert len(set(keys)) == len(keys)
+    # ordinals are contiguous first-visit positions, not display indices
+    assert sorted(int(k.rsplit("#", 1)[1]) for k in keys) == list(
+        range(len(keys))
+    )
+    # both q3 shuffles, in preorder: orders side then lineitem side
+    assert keys == ["shuffle[o_orderkey]#0", "shuffle[l_orderkey]#1"]
+
+
+def test_keys_stable_across_replans():
+    pq = tpch.q17()
+    k1 = list(_report_keys(pq.plan(CATALOG_Q17, 8).root).values())
+    k2 = list(_report_keys(pq.plan(CATALOG_Q17, 8).root).values())
+    assert k1 == k2 == ["shuffle[l_partkey]#0"]
+
+
+def test_keys_stable_when_salting_renumbers_the_plan():
+    """The regression this fixes: salting inserts nodes, so the SAME
+    shuffle edge gets a different display index — but the report key
+    must not move."""
+    pq = tpch.q17()
+    static = pq.plan(CATALOG_Q17, 8)
+    salted = pq.plan(CATALOG_Q17, 8, stats=_skewed_stats())
+    assert "salted x" in salted.explain() and "salted x" not in static.explain()
+
+    def idx_of_shuffle(plan):
+        (line,) = [ln for ln in plan.explain().splitlines()
+                   if "Exchange[shuffle" in ln]
+        return int(line.split("#")[1].split(" ")[0])
+
+    # the display index DID renumber (this is why it can't be the key) ...
+    assert idx_of_shuffle(static) != idx_of_shuffle(salted)
+    # ... but the report key did not
+    assert (
+        list(_report_keys(static.root).values())
+        == list(_report_keys(salted.root).values())
+        == ["shuffle[l_partkey]#0"]
+    )
+
+
+def test_keys_survive_pickle_roundtrip():
+    """Cached plans are persisted with pickle: the reloaded plan (all-new
+    object identities) must report under the same keys."""
+    pq = tpch.q17()
+    plan = pq.plan(CATALOG_Q17, 8)
+    clone = pickle.loads(pickle.dumps(plan))
+    assert (
+        list(_report_keys(plan.root).values())
+        == list(_report_keys(clone.root).values())
+    )
+
+
+def test_single_device_report_is_empty():
+    """n=1 elides exchanges: the report is {} before AND after a run —
+    never stale, never populated with degenerate entries."""
+    tabs = datagen.gen_all(0.004)
+    pq = tpch.q6()
+    tables = {t: tabs[t] for t in pq.tables}
+    plan = pq.plan({t: tables[t].capacity for t in pq.tables}, 1)
+    run = compile_plan(plan, tables)
+    assert run.exchange_report == {}
+    run()
+    assert run.exchange_report == {}

@@ -30,6 +30,8 @@ SCENARIOS = [
     "decode_sharded_equiv",
     "serve_continuous_ep",
     "skewed_q17",
+    "qserve_cached",
+    "exchange_report",
 ]
 
 

@@ -1,0 +1,227 @@
+"""Property tests for the plan-cache key layer (hypothesis optional extra).
+
+The cache key's contract, pinned as properties:
+
+* the canonical render / digest is a pure function of plan STRUCTURE —
+  identical across DAG construction orders (shared subtree vs duplicated
+  equal subtree) and across process restarts (no id()/hash-seed leakage);
+* distinct logical plans, catalogs, mesh shapes, and stats buckets never
+  collide: parameter tuples differ iff renders differ iff digests differ;
+* the stats bucket is deterministic, drops sampling-noise heavy hitters,
+  and SHIFTS when real skew appears — which invalidates the cache entry
+  (the second lookup replans, observed via the ``plan_physical.calls``
+  counter hook);
+* persisted entries verify their key material: a digest file whose
+  material mismatches reads as a miss, never a wrong plan.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis is an optional test extra")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.relational import stats as S
+from repro.relational.planner import logical as L
+from repro.relational.planner.physical import PlannerConfig, plan_physical
+from repro.relational.planner.plan_cache import (
+    PlanCache,
+    canonical_render,
+    plan_key,
+    stats_bucket,
+)
+from repro.relational.planner.tpch import ALL_QUERIES
+
+CATALOG = {"t": 4096, "u": 512}
+
+
+# ---------------------------------------------------------------------------
+# A tiny plan grammar: every draw returns (params, node) where ``params``
+# fully determines the structure — so render collisions are checkable.
+# ---------------------------------------------------------------------------
+
+@st.composite
+def plans(draw):
+    cols = draw(st.sampled_from([("a", "b"), ("a", "c"), ("a", "b", "c")]))
+    node = L.Scan("t", cols)
+    thresh = draw(st.none() | st.integers(0, 100))
+    if thresh is not None:
+        node = L.Filter(node, L.col("a") < L.lit(thresh))
+    join = draw(st.booleans())
+    if join:
+        payload = draw(st.sampled_from([("v",), ()]))
+        node = L.HashJoin(
+            build=L.Scan("u", ("k", "v")), probe=node,
+            build_key="k", probe_key="a", payload=payload,
+        )
+    else:
+        payload = None
+    terminal = draw(st.sampled_from(["agg", "topk", "none"]))
+    if terminal == "agg":
+        node = L.Aggregate(node, (("s", L.col("a"), "sum"),))
+    elif terminal == "topk":
+        k = draw(st.integers(1, 8))
+        node = L.TopK(node, key="a", k=k, payload=("a",))
+    else:
+        k = None
+    params = (cols, thresh, join, payload, terminal,
+              k if terminal == "topk" else None)
+    return params, node
+
+
+@given(plans(), plans())
+@settings(max_examples=80, deadline=None)
+def test_render_is_injective_over_the_grammar(p1, p2):
+    """Different structures never share a render; equal structures always
+    do — the collision half is what makes the digest trustworthy."""
+    (params1, n1), (params2, n2) = p1, p2
+    assert (params1 == params2) == (canonical_render(n1) == canonical_render(n2))
+    if params1 != params2:
+        k1 = plan_key(n1, CATALOG, 8)
+        k2 = plan_key(n2, CATALOG, 8)
+        assert k1.digest != k2.digest
+
+
+@given(plans())
+@settings(max_examples=40, deadline=None)
+def test_key_stable_across_reconstruction(p):
+    """Rebuilding the same logical DAG from scratch (fresh objects, fresh
+    order) yields the same render and digest — identity never leaks in."""
+    params, node = p
+    rerendered = canonical_render(node)
+    assert canonical_render(node) == rerendered  # idempotent
+    k1 = plan_key(node, CATALOG, 8)
+    k2 = plan_key(node, dict(reversed(list(CATALOG.items()))), 8)
+    assert k1.digest == k2.digest  # catalog dict order is not identity
+
+
+def test_shared_vs_duplicated_subtree_render_identically():
+    """Construction order / sharing is an executor concern, not identity:
+    a self-join via ONE shared Scan object renders the same as one built
+    from two equal Scan objects."""
+    shared = L.Scan("t", ("a", "b"))
+    j_shared = L.HashJoin(
+        build=shared, probe=shared, build_key="a", probe_key="a",
+        payload=(),
+    )
+    j_dup = L.HashJoin(
+        build=L.Scan("t", ("a", "b")), probe=L.Scan("t", ("a", "b")),
+        build_key="a", probe_key="a", payload=(),
+    )
+    assert canonical_render(j_shared) == canonical_render(j_dup)
+    assert (
+        plan_key(j_shared, CATALOG, 8).digest
+        == plan_key(j_dup, CATALOG, 8).digest
+    )
+
+
+@given(
+    st.sampled_from([(1, 1), (4, 1), (8, 1), (8, 2), (16, 4)]),
+    st.sampled_from([(1, 1), (4, 1), (8, 1), (8, 2), (16, 4)]),
+)
+@settings(max_examples=25, deadline=None)
+def test_distinct_mesh_shapes_never_collide(m1, m2):
+    node = ALL_QUERIES["q6"]().logical
+    cat = {"lineitem": 8192}
+    k1 = plan_key(node, cat, m1[0], num_pods=m1[1])
+    k2 = plan_key(node, cat, m2[0], num_pods=m2[1])
+    assert (m1 == m2) == (k1.digest == k2.digest)
+
+
+@given(st.integers(1, 10**7), st.integers(1, 10**7))
+@settings(max_examples=40, deadline=None)
+def test_distinct_catalogs_never_collide(cap1, cap2):
+    node = ALL_QUERIES["q6"]().logical
+    k1 = plan_key(node, {"lineitem": cap1}, 8)
+    k2 = plan_key(node, {"lineitem": cap2}, 8)
+    assert (cap1 == cap2) == (k1.digest == k2.digest)
+
+
+# ---------------------------------------------------------------------------
+# Stats bucketing.
+# ---------------------------------------------------------------------------
+
+def _profile(rows: int, heavy: tuple = (), ndv: int = 100) -> dict:
+    cs = S.ColumnStats(
+        name="a", ndv=ndv, heavy_hitters=heavy,
+        max_share=heavy[0][1] if heavy else 0.001,
+    )
+    prof = S.TableProfile(
+        table="t", rows=rows, sample_rows=min(rows, 1024),
+        columns={"a": cs}, sample={"a": np.zeros(4, np.int64)},
+    )
+    return {"t": prof}
+
+
+@given(st.integers(1, 10**6), st.integers(1, 10**6))
+@settings(max_examples=40, deadline=None)
+def test_stats_bucket_rows_quantize_to_decades(r1, r2):
+    b1, b2 = stats_bucket(_profile(r1)), stats_bucket(_profile(r2))
+    same_bucket = r1.bit_length() == r2.bit_length()
+    assert (b1 == b2) == same_bucket
+
+
+def test_stats_bucket_static_vs_profiled_and_noise_floor():
+    assert stats_bucket(None) == "static"
+    assert stats_bucket(None) != stats_bucket(_profile(1000))
+    # shares under the noise floor are sampling artifacts, not skew —
+    # they must not perturb the bucket...
+    assert stats_bucket(_profile(1000, heavy=((7, 0.001),))) == \
+        stats_bucket(_profile(1000))
+    # ...but a real heavy hitter must
+    assert stats_bucket(_profile(1000, heavy=((7, 0.3),))) != \
+        stats_bucket(_profile(1000))
+    # and only its magnitude class matters, not its sampled decimals
+    assert stats_bucket(_profile(1000, heavy=((7, 0.30),))) == \
+        stats_bucket(_profile(1000, heavy=((7, 0.33),)))
+
+
+def test_stats_bucket_shift_invalidates_entry():
+    """The satellite contract: when the stats bucket shifts, the second
+    lookup REPLANS instead of serving the stale plan."""
+    node = ALL_QUERIES["q6"]().logical
+    cat = {"lineitem": 8192}
+    cache = PlanCache()
+    cfg = PlannerConfig(num_units=8, hybrid=True)
+
+    def planner():
+        return plan_physical(node, cat, 8, cfg=cfg, name="q6")
+
+    uniform = {"lineitem": _profile(8192)["t"]}
+    skewed = {"lineitem": _profile(8192, heavy=((7, 0.4),))["t"]}
+    k_uni = plan_key(node, cat, 8, cfg=cfg, stats=uniform)
+    k_skew = plan_key(node, cat, 8, cfg=cfg, stats=skewed)
+    assert k_uni.digest != k_skew.digest
+
+    before = plan_physical.calls
+    _, hit = cache.get_plan(k_uni, planner)
+    assert not hit and plan_physical.calls == before + 1
+    _, hit = cache.get_plan(k_uni, planner)
+    assert hit and plan_physical.calls == before + 1  # warm: no replan
+    _, hit = cache.get_plan(k_skew, planner)  # bucket shifted -> replan
+    assert not hit and plan_physical.calls == before + 2
+
+
+# ---------------------------------------------------------------------------
+# Persistence safety.
+# ---------------------------------------------------------------------------
+
+def test_material_mismatch_reads_as_miss(tmp_path):
+    """A persisted entry is trusted only if its stored key material matches
+    byte-for-byte — a forged/colliding digest can never return a wrong
+    plan, and a corrupt file is a miss, not an error."""
+    import dataclasses
+
+    node = ALL_QUERIES["q6"]().logical
+    cat = {"lineitem": 8192}
+    key = plan_key(node, cat, 8)
+    cache = PlanCache(cache_dir=str(tmp_path))
+    plan, _ = cache.get_plan(key, lambda: plan_physical(node, cat, 8, name="q6"))
+
+    fresh = PlanCache(cache_dir=str(tmp_path))
+    forged = dataclasses.replace(key, material=key.material + "?")
+    assert fresh.lookup(forged) is None
+    (entry,) = tmp_path.glob("plan-*.pkl")
+    entry.write_bytes(b"not a pickle")
+    assert PlanCache(cache_dir=str(tmp_path)).lookup(key) is None
