@@ -28,6 +28,12 @@ from .common import emit
 WARM_TTFR_BAR = 0.2  # acceptance: warm TTFR < 0.2x cold
 
 
+def _ctx1():
+    from repro.relational.context import ExecutionContext
+
+    return ExecutionContext(num_shards=1)
+
+
 def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
     import numpy as np
 
@@ -42,11 +48,12 @@ def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
     names = sorted({t for pq in templates.values() for t in pq.tables})
     tables = {name: tabs[name] for name in names}
     rec: dict = {"sf": sf, "num_requests": requests}
+    _CTX1 = _ctx1()
 
     # -- repeated template: cold (plan+trace+compile) vs warm (cache) ------
     for qname in ("q3", "q17"):
         engine = QueryServeEngine(
-            tables, num_shards=1, num_slots=2, cache=PlanCache()
+            tables, _CTX1, num_slots=2, cache=PlanCache()
         )
         (cold,) = engine.serve([QueryRequest("t0", templates[qname])])
         (warm,) = engine.serve([QueryRequest("t0", templates[qname])])
@@ -71,7 +78,7 @@ def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
         seed=seed,
     )
     engine = QueryServeEngine(
-        tables, num_shards=1, num_slots=4, cache=PlanCache(),
+        tables, _CTX1, num_slots=4, cache=PlanCache(),
         templates=list(templates.values()),
     )
     t0 = time.perf_counter()
@@ -83,7 +90,7 @@ def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
     # before this engine existed).
     t0 = time.perf_counter()
     for r in stream:
-        tpch.run_query(r.query, tables, num_shards=1)
+        tpch.run_query(r.query, tables, _CTX1)
     qps_serial = requests / (time.perf_counter() - t0)
 
     assert qps_engine > qps_serial, (qps_engine, qps_serial)

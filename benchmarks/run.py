@@ -1,15 +1,16 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig10|skew|conn|tpch|fig3|fig12|kern|serve|qserve|roofline]
+    PYTHONPATH=src python -m benchmarks.run [--only fig10|skew|conn|tpch|fig3|fig12|kern|serve|qserve|oocore|roofline]
     PYTHONPATH=src python -m benchmarks.run --smoke [--json-dir artifacts/bench]
     PYTHONPATH=src python -m benchmarks.run --compare BASELINE[.json] [--json-dir artifacts/bench]
 
 Emits ``name,value,unit,note`` CSV lines.  ``--smoke`` runs the reduced
 CI lane — the static-vs-continuous serve comparison, the exchange pack
-A/B, the planned-TPC-H sweep, the adaptive-optimizer skew scenario, and
-the query-serving warm-vs-cold + multi-tenant QPS check — and writes
-``BENCH_serve.json`` / ``BENCH_exchange.json`` / ``BENCH_tpch.json`` /
-``BENCH_skew.json`` / ``BENCH_qserve.json`` under ``--json-dir``; the CI
+A/B, the planned-TPC-H sweep, the adaptive-optimizer skew scenario, the
+query-serving warm-vs-cold + multi-tenant QPS check, and the out-of-core
+streamed-vs-resident comparison — and writes ``BENCH_serve.json`` /
+``BENCH_exchange.json`` / ``BENCH_tpch.json`` / ``BENCH_skew.json`` /
+``BENCH_qserve.json`` / ``BENCH_oocore.json`` under ``--json-dir``; the CI
 ``bench-smoke`` job uploads those as artifacts, so the perf trajectory is
 recorded per PR instead of living only in logs.
 
@@ -37,6 +38,7 @@ from . import (
     bench_connections,
     bench_exchange,
     bench_kernels,
+    bench_oocore,
     bench_qserve,
     bench_scaling,
     bench_schedule,
@@ -56,6 +58,7 @@ SECTIONS = {
     "autotune": bench_autotune.run,  # modeled vs measured multiplexer tuning
     "serve": bench_serve.run,        # static vs continuous batching
     "qserve": bench_qserve.run,      # multi-tenant query serving + plan cache
+    "oocore": bench_oocore.run,      # out-of-core morsel streaming + prefetch
 }
 
 
@@ -91,11 +94,14 @@ def smoke(json_dir: str) -> None:
     skew_rec = bench_skew.run(smoke=True)
     print("# --- qserve (smoke) ---")
     qserve_rec = bench_qserve.run(smoke=True)
+    print("# --- oocore (smoke) ---")
+    oocore_rec = bench_oocore.run(smoke=True)
     for name, rec in (("BENCH_serve.json", serve_rec),
                       ("BENCH_exchange.json", exchange_rec),
                       ("BENCH_tpch.json", tpch_rec),
                       ("BENCH_skew.json", skew_rec),
-                      ("BENCH_qserve.json", qserve_rec)):
+                      ("BENCH_qserve.json", qserve_rec),
+                      ("BENCH_oocore.json", oocore_rec)):
         path = os.path.join(json_dir, name)
         with open(path, "w") as f:
             json.dump(rec, f, indent=2, sort_keys=True)

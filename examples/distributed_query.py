@@ -18,6 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.relational import datagen, distributed as D, oracle
+from repro.relational.context import ExecutionContext
 
 
 def main():
@@ -26,7 +27,7 @@ def main():
     tabs = datagen.gen_all(sf)
     li, part = tabs["lineitem"], tabs["part"]
     cust, orders = tabs["customer"], tabs["orders"]
-    n = 8
+    n = ExecutionContext(num_shards=8)
 
     # the cost-based planner's view of Q17 (the paper's Fig 6 example)
     from repro.relational.planner import tpch

@@ -491,6 +491,54 @@ def hash_shuffle(
     return rows_out, valid_out, lax.psum(dropped, axis_name)
 
 
+def hash_shuffle_spill(
+    keys: jax.Array,
+    rows: jax.Array,
+    axis_name: str,
+    capacity: int,
+    impl: AllToAllImpl = "round_robin",
+    valid: jax.Array | None = None,
+    pack_impl: PackImpl = "xla",
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Exchange that reports overflow instead of dropping it.
+
+    Same wire layout as single-chunk :func:`hash_shuffle`, but a row whose
+    within-destination arrival rank exceeds ``capacity`` is *withheld on the
+    sender* rather than silently lost: the third return value is a per-row
+    boolean ``spilled`` mask (sender-local, shape ``[rows]``).  The caller
+    moves the masked rows to a host-memory overflow partition and re-offers
+    them in a later drain pass.  Delivered rows are structurally drop-free —
+    every row is either in ``rows_out`` on its owner or flagged in
+    ``spilled`` on its sender, never neither.
+
+    Overflow is detectable before any data moves because the rank/count pass
+    runs on the sender (paper §3.2 step 2): ``my_rank >= capacity`` is
+    exactly the overflow condition the fixed-size message pool would hit.
+    """
+    n = _axis_size(axis_name)
+    T = keys.shape[0]
+    if valid is None:
+        valid = jnp.ones((T,), jnp.bool_)
+    if pack_impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        dest, my_rank, counts_all = kernel_ops.hash_partition_ranks(
+            keys, valid.astype(jnp.int32), n
+        )
+    else:
+        dest = (fibonacci_hash(keys) % jnp.uint32(n)).astype(jnp.int32)
+        dest = jnp.where(valid, dest, n)
+        my_rank, counts_all = _rank_by_destination(dest, n, pack_impl)
+    spilled = valid & (my_rank >= capacity)
+    deliver = valid & ~spilled
+    bufs, counts, _ = _scatter_pack(dest, my_rank, counts_all, rows, n, capacity, deliver)
+    shuffled = all_to_all(bufs, axis_name, impl=impl)
+    counts_in = all_to_all(counts.reshape(n, 1), axis_name, impl=impl).reshape(n)
+    rows_out = shuffled.reshape((n * capacity,) + shuffled.shape[2:])
+    valid_out = (jnp.arange(capacity)[None, :] < counts_in[:, None]).reshape(n * capacity)
+    return rows_out, valid_out, spilled
+
+
 # ----------------------------------------------------------------------------
 # Two-level exchange: coarse cross-pod hop + fine in-pod shuffle (paper §3.1).
 # ----------------------------------------------------------------------------
@@ -716,6 +764,7 @@ __all__ = [
     "fibonacci_hash",
     "pack_by_destination",
     "hash_shuffle",
+    "hash_shuffle_spill",
     "hash_shuffle_two_level",
     "dispatch_two_level",
     "combine_two_level",

@@ -214,6 +214,35 @@ class CommMultiplexer:
             transport_chunks=transport,
         )
 
+    def hash_shuffle_spill(
+        self,
+        keys: jax.Array,
+        rows: jax.Array,
+        axis_name: str,
+        capacity: int,
+        valid: jax.Array | None = None,
+    ):
+        """Capacity-bounded exchange that flags overflow instead of dropping.
+
+        Returns ``(rows_out, valid_out, spilled)`` with ``spilled`` a
+        sender-local per-row mask; the caller parks those rows in a
+        host-memory overflow partition and drains them later
+        (``relational.planner.stream``).  Single-level meshes only: on a pod
+        mesh the streamed executor sizes messages for zero drop instead,
+        because the two-level hop re-packs rows mid-flight and the sender
+        can no longer name its spilled rows.
+        """
+        if self.plan.pod_axis is not None:
+            raise NotImplementedError(
+                "spill-capable exchange is single-level only; pod meshes "
+                "must size streamed exchanges for zero drop"
+            )
+        self.plan.validate_axis_for_alltoall(axis_name)
+        return exchange.hash_shuffle_spill(
+            keys, rows, axis_name, capacity, impl=self.impl, valid=valid,
+            pack_impl=self.pack_impl,
+        )
+
     def broadcast(self, x: jax.Array, axis_name: str) -> jax.Array:
         impl = "xla" if self.impl == "xla" else "ring"
         return exchange.broadcast_exchange(x, axis_name, impl=impl)

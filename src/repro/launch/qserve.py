@@ -18,6 +18,7 @@ import json
 import time
 
 from repro.relational import datagen
+from repro.relational.context import ExecutionContext, StatsMode
 from repro.relational.planner import tpch
 from repro.relational.planner.physical import plan_physical
 from repro.relational.planner.plan_cache import PlanCache
@@ -53,11 +54,13 @@ def main():
     calls_before = plan_physical.calls
     engine = QueryServeEngine(
         tables,
-        num_shards=args.num_shards,
-        num_pods=args.num_pods,
+        ExecutionContext(
+            num_shards=args.num_shards,
+            num_pods=args.num_pods,
+            stats_mode=StatsMode.COLLECT if args.stats else StatsMode.STATIC,
+        ),
         num_slots=args.slots,
         cache=PlanCache(cache_dir=args.cache_dir),
-        stats="collect" if args.stats else None,
         templates=templates,
     )
     reqs = make_query_mix(

@@ -1,0 +1,229 @@
+"""One execution-configuration object for the whole query surface.
+
+Historically every entry point (``run_query``, ``explain_query``,
+``compile_plan``, the ``q*_distributed`` wrappers, ``QueryServeEngine``)
+hand-threaded the same tuple of knobs — ``(num_shards, num_pods, impl,
+pack_impl, num_chunks, cross_pod, cfg, stats)`` — through its signature.
+``ExecutionContext`` replaces that sprawl: mesh shape, multiplexer knobs,
+planner config, stats mode, and the out-of-core morsel/spill knobs live in
+one frozen, hashable dataclass that every entry point accepts.
+
+The old kwarg spellings keep working for one release through a single
+``DeprecationWarning`` shim (:func:`resolve_context`); in-repo code is fully
+migrated and the test suite runs with ``error::DeprecationWarning`` so only
+the shim itself may emit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import warnings
+from typing import TYPE_CHECKING, Any, Mapping
+
+if TYPE_CHECKING:  # annotation-only: keeps this module import-cycle-free
+    from repro.relational.planner.physical import PlannerConfig
+
+__all__ = [
+    "StatsMode",
+    "ExecutionContext",
+    "resolve_context",
+    "reset_deprecation_warning",
+    "LEGACY_KWARGS",
+]
+
+
+class StatsMode(enum.Enum):
+    """How the planner obtains table statistics.
+
+    Replaces the old ``stats="collect"`` magic string (which punned a str
+    sentinel and a profile dict through one parameter).
+    """
+
+    #: Plan from catalog capacities only (no sampling).
+    STATIC = "static"
+    #: Sample the input tables at plan time (``relational.stats.collect_stats``).
+    COLLECT = "collect"
+    #: Use the pre-collected profile in ``ExecutionContext.stats_profile``.
+    PROFILE = "profile"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext:
+    """Frozen bundle of everything that parameterizes query execution.
+
+    Hashable (usable as a cache key); ``stats_profile`` is excluded from
+    equality/hash because profile dicts are unhashable payload, not
+    configuration — two contexts in PROFILE mode compare equal iff their
+    other knobs match.
+    """
+
+    # --- mesh shape -------------------------------------------------------
+    num_shards: int = 1
+    num_pods: int = 1
+    # --- multiplexer knobs (see core.multiplexer.make_multiplexer) --------
+    impl: str = "auto"
+    pack_impl: str | None = None
+    num_chunks: int | None = None
+    cross_pod: str | None = None
+    # --- planner ----------------------------------------------------------
+    cfg: PlannerConfig | None = None
+    stats_mode: StatsMode = StatsMode.STATIC
+    stats_profile: Mapping[str, Any] | None = dataclasses.field(
+        default=None, compare=False
+    )
+    # --- out-of-core morsel streaming ------------------------------------
+    #: Global rows per morsel.  On plain in-memory tables this wraps any
+    #: table larger than ``morsel_rows`` in a chunked MorselView; chunked
+    #: DataSources stream regardless.  None = fully in-memory execution.
+    morsel_rows: int | None = None
+    #: Hard per-device row budget.  In-memory execution refuses tables whose
+    #: per-shard slice exceeds it; streamed execution bounds morsels and
+    #: resident state by it.  None = unbounded.
+    device_row_budget: int | None = None
+    #: Per-(src,dst) message capacity for streamed exchanges.  None sizes
+    #: messages for structural zero drop; smaller values force overflow
+    #: (spill when ``spill=True``, error otherwise).
+    exchange_rows: int | None = None
+    #: Route exchange overflow to a host-memory overflow partition and
+    #: re-shuffle it in drain passes instead of raising.
+    spill: bool = False
+    #: Per-shard capacity of streamed group-by state (distinct groups per
+    #: shard).  None = min(plan capacity, device_row_budget).
+    group_state_rows: int | None = None
+    #: Depth of the host→device prefetch queue for morsel streaming.
+    prefetch_depth: int = 2
+
+    def __post_init__(self) -> None:
+        if self.num_shards < 1 or self.num_pods < 1:
+            raise ValueError("num_shards and num_pods must be >= 1")
+        if self.num_shards % self.num_pods:
+            raise ValueError(
+                f"num_shards={self.num_shards} not divisible by num_pods={self.num_pods}"
+            )
+        if not isinstance(self.stats_mode, StatsMode):
+            raise TypeError(
+                f"stats_mode must be a StatsMode, got {self.stats_mode!r}; "
+                'the stats="collect" magic string is only accepted through the '
+                "deprecated-kwarg shim"
+            )
+        if self.stats_mode is StatsMode.PROFILE and self.stats_profile is None:
+            raise ValueError("StatsMode.PROFILE requires stats_profile")
+        if self.stats_profile is not None and self.stats_mode is not StatsMode.PROFILE:
+            raise ValueError("stats_profile is only meaningful with StatsMode.PROFILE")
+
+    # -- derived helpers ---------------------------------------------------
+
+    def planner_stats(self, tables: Mapping[str, Any] | None = None):
+        """Resolve the ``stats`` argument for ``plan_physical``.
+
+        ``tables`` (name → Table) is required for COLLECT mode; pass the
+        query's input tables.
+        """
+        if self.stats_mode is StatsMode.STATIC:
+            return None
+        if self.stats_mode is StatsMode.PROFILE:
+            return dict(self.stats_profile)
+        if tables is None:
+            raise ValueError("StatsMode.COLLECT needs the input tables to sample")
+        from repro.relational import stats as rstats
+
+        return rstats.collect_stats(dict(tables))
+
+    def with_(self, **changes) -> "ExecutionContext":
+        """`dataclasses.replace` spelled as a method."""
+        return dataclasses.replace(self, **changes)
+
+
+# Legacy kwarg names accepted (for one release) by every migrated entry
+# point.  ``stats`` carries the old str-or-dict pun and is unpunned below.
+LEGACY_KWARGS = (
+    "num_shards",
+    "num_pods",
+    "impl",
+    "pack_impl",
+    "num_chunks",
+    "cross_pod",
+    "cfg",
+    "stats",
+)
+
+_warned = False
+
+
+def reset_deprecation_warning() -> None:
+    """Re-arm the warn-once latch (test helper)."""
+    global _warned
+    _warned = False
+
+
+def _warn_once(where: str) -> None:
+    global _warned
+    if _warned:
+        return
+    _warned = True
+    warnings.warn(
+        f"{where}: passing num_shards/impl/pack_impl/num_chunks/num_pods/"
+        "cross_pod/cfg/stats individually is deprecated; pass an "
+        "ExecutionContext instead (repro.relational.context). The old "
+        "kwargs will be removed next release.",
+        DeprecationWarning,
+        stacklevel=4,
+    )
+
+
+def _from_legacy(where: str, legacy: dict) -> ExecutionContext:
+    unknown = set(legacy) - set(LEGACY_KWARGS)
+    if unknown:
+        raise TypeError(f"{where}: unexpected keyword arguments {sorted(unknown)}")
+    _warn_once(where)
+    stats = legacy.pop("stats", None)
+    if stats == "collect":
+        legacy["stats_mode"] = StatsMode.COLLECT
+    elif isinstance(stats, Mapping):
+        legacy["stats_mode"] = StatsMode.PROFILE
+        legacy["stats_profile"] = stats
+    elif stats is not None:
+        raise TypeError(f"{where}: stats must be None, 'collect', or a profile dict")
+    if legacy.get("impl") is None:
+        legacy.pop("impl", None)
+    return ExecutionContext(**legacy)
+
+
+def resolve_context(
+    ctx: "ExecutionContext | int | None",
+    legacy: dict | None = None,
+    *,
+    where: str,
+    default: "ExecutionContext | None" = None,
+) -> ExecutionContext:
+    """Accept the new ExecutionContext or the deprecated kwarg spelling.
+
+    ``ctx`` is either an :class:`ExecutionContext` (the supported API), a
+    bare int (the old positional ``num_shards``), or ``None``; ``legacy``
+    holds whatever old-style keyword arguments the caller captured via
+    ``**legacy``.  Any non-ExecutionContext spelling emits one
+    ``DeprecationWarning`` per process (re-arm with
+    :func:`reset_deprecation_warning`).
+    """
+    legacy = dict(legacy or {})
+    if isinstance(ctx, ExecutionContext):
+        if legacy:
+            raise TypeError(
+                f"{where}: legacy kwargs {sorted(legacy)} cannot be combined "
+                "with an ExecutionContext; set them on the context"
+            )
+        return ctx
+    if isinstance(ctx, bool):
+        raise TypeError(f"{where}: expected ExecutionContext or int, got {ctx!r}")
+    if isinstance(ctx, int):
+        if "num_shards" in legacy:
+            raise TypeError(f"{where}: num_shards given positionally and by keyword")
+        legacy["num_shards"] = ctx
+    elif ctx is not None:
+        raise TypeError(f"{where}: expected ExecutionContext or int, got {type(ctx)!r}")
+    if not legacy:
+        if default is not None:
+            return default
+        raise TypeError(f"{where}: missing ExecutionContext (or legacy num_shards)")
+    return _from_legacy(where, legacy)

@@ -132,16 +132,14 @@ def gen_orders(sf: float, seed: int = 3) -> Table:
     )
 
 
-def gen_lineitem(
-    sf: float,
-    seed: int = 4,
-    zipf_partkey: float | None = None,
-    zipf_orderkey: float | None = None,
-) -> Table:
-    rng = np.random.default_rng(seed)
-    n = table_capacity("lineitem", sf)
-    norder = table_capacity("orders", sf)
-    npart = table_capacity("part", sf)
+def _lineitem_columns(
+    rng,
+    n: int,
+    npart: int,
+    norder: int,
+    zipf_partkey: float | None,
+    zipf_orderkey: float | None,
+) -> dict[str, np.ndarray]:
     if zipf_partkey:
         partkey = _zipf_ranks(rng, n, npart, zipf_partkey).astype(np.int32)
     else:
@@ -171,27 +169,82 @@ def gen_lineitem(
     commitdate = (orderdate + rng.integers(30, 91, n)).astype(np.int32)
     receiptdate = (shipdate + rng.integers(1, 31, n)).astype(np.int32)
     shipmode = rng.integers(0, len(SHIPMODES), n).astype(np.int32)
-    return from_numpy(
-        {
-            "l_orderkey": orderkey,
-            "l_partkey": partkey,
-            "l_quantity": qty,
-            "l_extendedprice": price,
-            "l_discount": discount,
-            "l_tax": tax,
-            "l_returnflag": returnflag,
-            "l_linestatus": linestatus,
-            "l_shipdate": shipdate,
-            "l_commitdate": commitdate,
-            "l_receiptdate": receiptdate,
-            "l_shipmode": shipmode,
-        },
-        dictionaries={
-            "l_returnflag": RETURNFLAGS,
-            "l_linestatus": LINESTATUS,
-            "l_shipmode": SHIPMODES,
-        },
+    return {
+        "l_orderkey": orderkey,
+        "l_partkey": partkey,
+        "l_quantity": qty,
+        "l_extendedprice": price,
+        "l_discount": discount,
+        "l_tax": tax,
+        "l_returnflag": returnflag,
+        "l_linestatus": linestatus,
+        "l_shipdate": shipdate,
+        "l_commitdate": commitdate,
+        "l_receiptdate": receiptdate,
+        "l_shipmode": shipmode,
+    }
+
+
+LINEITEM_DICTIONARIES = {
+    "l_returnflag": RETURNFLAGS,
+    "l_linestatus": LINESTATUS,
+    "l_shipmode": SHIPMODES,
+}
+
+
+def gen_lineitem(
+    sf: float,
+    seed: int = 4,
+    zipf_partkey: float | None = None,
+    zipf_orderkey: float | None = None,
+) -> Table:
+    rng = np.random.default_rng(seed)
+    n = table_capacity("lineitem", sf)
+    cols = _lineitem_columns(
+        rng,
+        n,
+        table_capacity("part", sf),
+        table_capacity("orders", sf),
+        zipf_partkey,
+        zipf_orderkey,
     )
+    return from_numpy(cols, dictionaries=LINEITEM_DICTIONARIES)
+
+
+def gen_lineitem_chunked(
+    sf: float,
+    num_chunks: int,
+    seed: int = 4,
+    zipf_partkey: float | None = None,
+    zipf_orderkey: float | None = None,
+):
+    """Lineitem as a chunked :class:`~repro.relational.source.GeneratorSource`.
+
+    Each chunk is generated lazily from its own seed ``(seed, chunk_index)``
+    — only one chunk of rows is ever resident on the host, so total scale
+    can exceed any memory budget.  Key domains (part/order capacities) are
+    those of the FULL scale factor, so joins against ``gen_part``/
+    ``gen_orders`` at the same ``sf`` behave like one big table.
+
+    The chunked stream is its own deterministic dataset (per-chunk seeding),
+    not a re-chunking of ``gen_lineitem(sf, seed)``; the streaming oracle is
+    ``source.materialize()``.
+    """
+    from .source import GeneratorSource
+
+    if num_chunks < 1:
+        raise ValueError("num_chunks must be >= 1")
+    total = table_capacity("lineitem", sf)
+    chunk_rows = -(-total // num_chunks)  # ceil: capacity rounds up to fit
+    npart = table_capacity("part", sf)
+    norder = table_capacity("orders", sf)
+
+    def make_chunk(i: int) -> Table:
+        rng = np.random.default_rng((seed, i))
+        cols = _lineitem_columns(rng, chunk_rows, npart, norder, zipf_partkey, zipf_orderkey)
+        return from_numpy(cols, dictionaries=LINEITEM_DICTIONARIES)
+
+    return GeneratorSource(make_chunk, num_chunks, chunk_rows)
 
 
 def gen_all(
@@ -224,5 +277,6 @@ __all__ = [
     "gen_customer",
     "gen_orders",
     "gen_lineitem",
+    "gen_lineitem_chunked",
     "gen_all",
 ]

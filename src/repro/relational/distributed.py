@@ -11,15 +11,24 @@ IR, and the planner's decisions are inspectable via
 ``planner.tpch.explain_query`` (golden-snapshotted under
 ``tests/golden_plans/``).
 
+Execution is parameterized by ONE object: pass an
+:class:`~repro.relational.context.ExecutionContext` (mesh shape,
+multiplexer knobs, planner config, stats mode, out-of-core morsel/spill
+knobs) as ``ctx``.  The old spellings — ``num_shards`` positionally plus
+``impl=``/``pack_impl=``/``num_chunks=``/``num_pods=``/``cross_pod=``
+keywords — still resolve for one release through the deprecation shim in
+``run_query``.  Inputs may be in-memory ``Table``\\ s or chunked
+``DataSource``\\ s (the latter stream morsel-by-morsel, out of core).
+
 The execution contract is unchanged from the hand-written era and the
 equivalence suites still hold these entry points to it:
 
 * every exchange runs through ONE per-query auto-tuned
   :class:`~repro.core.multiplexer.CommMultiplexer` (``impl="auto"``;
-  explicit ``impl``/``pack_impl``/``num_chunks``/``cross_pod`` pin knobs
-  for A/B tests);
+  explicit knobs on the context pin them for A/B tests);
 * capacities are the static zero-drop bound and any exchange overflow
-  raises instead of silently losing rows;
+  raises instead of silently losing rows (unless the context opts into
+  spill-to-host with ``spill=True``);
 * ``num_pods > 1`` runs the two-level ``(pod, q)`` mesh: shuffles take the
   coarse-cross-pod + fine-in-pod route, build sides follow the tuned
   ``cross_pod`` strategy, and results equal the single-pod plan exactly.
@@ -29,186 +38,82 @@ from __future__ import annotations
 
 from .planner import tpch
 from .planner.tpch import run_query as _run
-from .table import Table
 
 
-# ----------------------------------------------------------------------------
-# Q1/Q6 — pure pre-aggregation plans: no row exchange at all (paper Fig 11).
-# ----------------------------------------------------------------------------
-
-def q1_distributed(
-    lineitem: Table, num_shards: int, delta_days: int = 90, num_pods: int = 1
-):
-    return _run(
-        tpch.q1(delta_days), {"lineitem": lineitem}, num_shards,
-        num_pods=num_pods,
-    )
+def q1_distributed(lineitem, ctx=None, delta_days: int = 90, **legacy):
+    return _run(tpch.q1(delta_days), {"lineitem": lineitem}, ctx, **legacy)
 
 
-def q6_distributed(
-    lineitem: Table, num_shards: int, year: int = 1994, num_pods: int = 1
-):
-    return _run(
-        tpch.q6(year), {"lineitem": lineitem}, num_shards, num_pods=num_pods
-    )
+def q6_distributed(lineitem, ctx=None, year: int = 1994, **legacy):
+    return _run(tpch.q6(year), {"lineitem": lineitem}, ctx, **legacy)
 
-
-# ----------------------------------------------------------------------------
-# Q17 — the paper's worked example (Fig 6): the planner broadcasts the
-# (filtered, tiny) part side and shares one lineitem shuffle between the
-# correlated-AVG group-by and the join back.
-# ----------------------------------------------------------------------------
 
 def q17_distributed(
-    lineitem: Table,
-    part: Table,
-    num_shards: int,
-    brand: int = 12,
-    container: int = 2,
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    num_pods: int = 1,
-    cross_pod: str | None = None,
+    lineitem, part, ctx=None, brand: int = 12, container: int = 2, **legacy
 ):
     return _run(
-        tpch.q17(brand, container), {"lineitem": lineitem, "part": part},
-        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
-        num_chunks=num_chunks, cross_pod=cross_pod,
+        tpch.q17(brand, container),
+        {"lineitem": lineitem, "part": part}, ctx, **legacy,
     )
 
 
-# ----------------------------------------------------------------------------
-# Q3 — 3-table join + distributed top-10.  The hybrid threshold broadcasts
-# the customer side (10x smaller than orders); lineitem and the surviving
-# order keys co-partition on orderkey.
-# ----------------------------------------------------------------------------
-
 def q3_distributed(
-    customer: Table,
-    orders: Table,
-    lineitem: Table,
-    num_shards: int,
-    segment: int = 1,
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    num_pods: int = 1,
-    cross_pod: str | None = None,
+    customer, orders, lineitem, ctx=None, segment: int = 1, **legacy
 ):
     return _run(
         tpch.q3(segment),
         {"customer": customer, "orders": orders, "lineitem": lineitem},
-        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
-        num_chunks=num_chunks, cross_pod=cross_pod,
+        ctx, **legacy,
     )
 
-
-# ----------------------------------------------------------------------------
-# Q14/Q19 — broadcast-part joins; the planner drops the lineitem shuffle the
-# old hand-written plan paid for nothing (no group-by needs co-partitioning).
-# ----------------------------------------------------------------------------
 
 def q14_distributed(
-    lineitem: Table,
-    part: Table,
-    num_shards: int,
-    impl: str = "auto",
-    year: int = 1995,
-    month: int = 9,
-    promo_brands: int = 5,
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    num_pods: int = 1,
-    cross_pod: str | None = None,
+    lineitem, part, ctx=None, impl=None, year: int = 1995, month: int = 9,
+    promo_brands: int = 5, **legacy,
 ):
+    if impl is not None:  # old 4th positional arg
+        legacy["impl"] = impl
     return _run(
         tpch.q14(year, month, promo_brands),
-        {"lineitem": lineitem, "part": part},
-        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
-        num_chunks=num_chunks, cross_pod=cross_pod,
+        {"lineitem": lineitem, "part": part}, ctx, **legacy,
     )
 
 
-def q19_distributed(
-    lineitem: Table,
-    part: Table,
-    num_shards: int,
-    impl: str = "auto",
-    terms=None,
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    num_pods: int = 1,
-    cross_pod: str | None = None,
-):
+def q19_distributed(lineitem, part, ctx=None, impl=None, terms=None, **legacy):
+    if impl is not None:  # old 4th positional arg
+        legacy["impl"] = impl
     return _run(
-        tpch.q19(terms), {"lineitem": lineitem, "part": part},
-        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
-        num_chunks=num_chunks, cross_pod=cross_pod,
+        tpch.q19(terms), {"lineitem": lineitem, "part": part}, ctx, **legacy
     )
 
-
-# ----------------------------------------------------------------------------
-# Q4/Q12/Q18 — plan-only queries: these never had a hand-written distributed
-# version; the logical plan in planner/tpch.py IS the implementation.
-# ----------------------------------------------------------------------------
 
 def q4_distributed(
-    lineitem: Table,
-    orders: Table,
-    num_shards: int,
-    year: int = 1993,
-    month: int = 7,
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    num_pods: int = 1,
-    cross_pod: str | None = None,
+    lineitem, orders, ctx=None, year: int = 1993, month: int = 7, **legacy
 ):
     return _run(
         tpch.q4(year, month), {"lineitem": lineitem, "orders": orders},
-        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
-        num_chunks=num_chunks, cross_pod=cross_pod,
+        ctx, **legacy,
     )
 
 
 def q12_distributed(
-    lineitem: Table,
-    orders: Table,
-    num_shards: int,
-    year: int = 1994,
-    modes: tuple[int, int] = (5, 3),
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    num_pods: int = 1,
-    cross_pod: str | None = None,
+    lineitem, orders, ctx=None, year: int = 1994,
+    modes: tuple[int, int] = (5, 3), **legacy,
 ):
     return _run(
         tpch.q12(year, modes), {"lineitem": lineitem, "orders": orders},
-        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
-        num_chunks=num_chunks, cross_pod=cross_pod,
+        ctx, **legacy,
     )
 
 
 def q18_distributed(
-    lineitem: Table,
-    orders: Table,
-    customer: Table,
-    num_shards: int,
-    threshold: int = 300,
-    k: int = 100,
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    num_pods: int = 1,
-    cross_pod: str | None = None,
+    lineitem, orders, customer, ctx=None, threshold: int = 300, k: int = 100,
+    **legacy,
 ):
     return _run(
         tpch.q18(threshold, k),
         {"lineitem": lineitem, "orders": orders, "customer": customer},
-        num_shards, num_pods=num_pods, impl=impl, pack_impl=pack_impl,
-        num_chunks=num_chunks, cross_pod=cross_pod,
+        ctx, **legacy,
     )
 
 

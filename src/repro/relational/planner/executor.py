@@ -285,34 +285,108 @@ def _check_vma(plan: PhysicalPlan, mux: CommMultiplexer) -> bool:
     )
 
 
-def execute_plan(
-    plan: PhysicalPlan,
-    tables: dict[str, Table],
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-):
-    """Run a physical plan over real tables; returns the fetched result dict.
+def _resolve_exec_ctx(plan: PhysicalPlan, ctx, legacy: dict, where: str):
+    """Accept ExecutionContext / legacy kwargs / nothing for this plan.
 
-    ``tables`` maps base-table names to :class:`Table`\\ s whose capacities
-    match the catalog the plan was built from (the planner sized the
-    exchange buffers for exactly these shapes).
+    The bare two-argument call (``compile_plan(plan, tables)``) is still
+    first-class API — it resolves to the plan's own mesh shape with default
+    knobs and emits no deprecation warning.  Anything spelled through the
+    old per-knob kwargs warns once (see :mod:`repro.relational.context`).
     """
-    return compile_plan(
-        plan, tables, impl=impl, pack_impl=pack_impl, num_chunks=num_chunks
-    )()
+    from ..context import ExecutionContext, resolve_context
+
+    if isinstance(ctx, str):  # the old positional ``impl``
+        legacy = {"impl": ctx, **legacy}
+        ctx = None
+    if not isinstance(ctx, ExecutionContext) and legacy:
+        legacy.setdefault("num_shards", plan.num_shards)
+        legacy.setdefault("num_pods", plan.num_pods)
+    ctx = resolve_context(
+        ctx, legacy, where=where,
+        default=ExecutionContext(plan.num_shards, num_pods=plan.num_pods),
+    )
+    if (ctx.num_shards, ctx.num_pods) != (plan.num_shards, plan.num_pods):
+        raise ValueError(
+            f"{where}: context mesh {ctx.num_shards}x{ctx.num_pods} does not "
+            f"match the plan's {plan.num_shards}x{plan.num_pods}; re-plan or "
+            "fix the context"
+        )
+    return ctx
+
+
+def _resident_table(name: str, obj) -> Table:
+    """Coerce a Table-or-DataSource to an in-memory Table (the executor's
+    unit of work); chunked sources belong to the streamed path."""
+    if isinstance(obj, Table):
+        return obj
+    from ..source import DataSource
+
+    if isinstance(obj, DataSource):
+        if obj.is_chunked:
+            raise ValueError(
+                f"table {name!r} is a chunked DataSource; in-memory "
+                "execution cannot hold it — run through run_query (or "
+                "stream.compile_plan_streamed) for out-of-core execution"
+            )
+        return obj.materialize()
+    raise TypeError(f"table {name!r}: expected Table or DataSource, got {type(obj)!r}")
+
+
+def _check_row_budget(plan: PhysicalPlan, tables: dict[str, Table], ctx) -> None:
+    """``device_row_budget`` is a hard promise: in-memory execution refuses
+    base tables whose per-shard slice exceeds it (chunk them instead)."""
+    if ctx.device_row_budget is None:
+        return
+    for name in plan.scans:
+        per_shard = math.ceil(tables[name].capacity / plan.num_shards)
+        if per_shard > ctx.device_row_budget:
+            raise ValueError(
+                f"table {name!r} needs {per_shard} rows/device, over "
+                f"device_row_budget={ctx.device_row_budget}; stream it as a "
+                "chunked DataSource (run_query with morsel_rows) instead"
+            )
+
+
+def execute_plan(plan: PhysicalPlan, tables: dict, ctx=None, **legacy):
+    """Run a physical plan over real data; returns the fetched result dict.
+
+    ``tables`` maps base-table names to :class:`Table`\\ s (or
+    :class:`~repro.relational.source.DataSource`\\ s) whose capacities match
+    the catalog the plan was built from.  A chunked source switches to
+    morsel-streamed out-of-core execution
+    (:func:`~repro.relational.planner.stream.compile_plan_streamed`);
+    everything resident runs the one-shard_map in-memory path.  ``ctx`` is
+    an :class:`~repro.relational.context.ExecutionContext`; the old
+    ``impl=``/``pack_impl=``/``num_chunks=`` kwargs still work for one
+    release via the deprecation shim.
+    """
+    ctx = _resolve_exec_ctx(plan, ctx, legacy, where="execute_plan")
+    from ..source import DataSource
+
+    if any(
+        isinstance(t, DataSource) and t.is_chunked for t in tables.values()
+    ):
+        from .stream import compile_plan_streamed
+
+        return compile_plan_streamed(plan, tables, ctx)()
+    return compile_plan(plan, tables, ctx)()
 
 
 def compile_plan(
     plan: PhysicalPlan,
-    tables: dict[str, Table],
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
+    tables: dict,
+    ctx=None,
     mux: CommMultiplexer | None = None,
+    **legacy,
 ):
     """Build a zero-arg runner for the plan (jit object created once, so
     repeated calls hit the compile cache — what the benchmarks time).
+
+    ``ctx`` is an :class:`~repro.relational.context.ExecutionContext`
+    carrying the multiplexer knobs (its mesh shape must match the plan's);
+    omitted, the plan's own mesh with default knobs applies.  The old
+    ``impl=``/``pack_impl=``/``num_chunks=`` kwargs resolve through the
+    one-release deprecation shim.
 
     ``mux`` injects a SHARED multiplexer instead of building the per-query
     one: the query-serving engine tunes one knob set over every concurrent
@@ -327,7 +401,11 @@ def compile_plan(
     admission round before finalizing any of it, so concurrent queries
     overlap on the XLA async runtime.
     """
+    ctx = _resolve_exec_ctx(plan, ctx, legacy, where="compile_plan")
+    impl, pack_impl, num_chunks = ctx.impl, ctx.pack_impl, ctx.num_chunks
     num_shards, num_pods = plan.num_shards, plan.num_pods
+    tables = {name: _resident_table(name, tables[name]) for name in plan.scans}
+    _check_row_budget(plan, tables, ctx)
     for name in plan.scans:
         if tables[name].capacity != plan.catalog[name]:
             raise ValueError(

@@ -55,7 +55,7 @@ from .physical import DEFAULT_SALT_THRESHOLD, PhysicalPlan, PlannerConfig
 
 # Bump whenever the key material, the pickle layout, or plan semantics
 # change — stale artifacts from an older layout must read as misses.
-CACHE_FORMAT_VERSION = 2
+CACHE_FORMAT_VERSION = 3
 
 # Heavy-hitter shares below this floor are sampling noise, not skew: they
 # can never push a shard past the salting threshold, so they must not
@@ -185,6 +185,7 @@ def plan_key(
     cross_pod: str | None = None,
     stats: Mapping[str, S.TableProfile] | None = None,
     salt_threshold: float = DEFAULT_SALT_THRESHOLD,
+    morsel_rows: int | None = None,
 ) -> PlanKey:
     """The cache key for ``plan_physical`` with these exact arguments.
 
@@ -207,6 +208,7 @@ def plan_key(
             f"cross_pod={cross_pod}",
             f"salt_threshold={float(salt_threshold)!r}",
             f"stats={stats_bucket(stats)}",
+            f"morsel_rows={morsel_rows}",
         )
     )
     digest = hashlib.sha256(material.encode("utf-8")).hexdigest()

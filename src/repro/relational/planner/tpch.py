@@ -32,7 +32,8 @@ from ..datagen import (
     SHIPMODES,
     date_to_days,
 )
-from ..table import Table
+from ..context import StatsMode, resolve_context
+from ..source import MorselView, as_source
 from . import logical as L
 from .executor import execute_plan
 from .logical import Aggregate, Filter, GroupBy, HashJoin, Project, Scan, TopK
@@ -58,56 +59,86 @@ class PlannedQuery:
         cfg: PlannerConfig | None = None,
         cross_pod: str | None = None,
         stats: dict | None = None,
+        morsel_rows: int | None = None,
     ) -> PhysicalPlan:
         return plan_physical(
             self.logical, catalog, num_shards, num_pods=num_pods, cfg=cfg,
             name=self.name, cross_pod=cross_pod, stats=stats,
+            morsel_rows=morsel_rows,
         )
 
 
-def run_query(
-    pq: PlannedQuery,
-    tables: dict[str, Table],
-    num_shards: int,
-    num_pods: int = 1,
-    impl: str = "auto",
-    pack_impl: str | None = None,
-    num_chunks: int | None = None,
-    cross_pod: str | None = None,
-    cfg: PlannerConfig | None = None,
-    stats: dict | None = None,
-):
-    """Plan against the actual table capacities, execute, finalize.
+def run_query(pq: PlannedQuery, tables: dict, ctx=None, **legacy):
+    """Plan against the actual source capacities, execute, finalize.
 
-    ``stats="collect"`` profiles the actual input tables first
-    (:func:`repro.relational.stats.collect_stats`) so the planner can react
-    to skew; a profile dict passes through as-is; None keeps static plans.
+    ``tables`` maps base-table names to :class:`Table`\\ s or
+    :class:`~repro.relational.source.DataSource`\\ s.  Execution is
+    parameterized by one :class:`~repro.relational.context.ExecutionContext`
+    (``ctx``); the old per-knob kwargs (``num_shards`` positionally,
+    ``impl=``, ``stats="collect"``, ...) still resolve for one release
+    through the deprecation shim.
+
+    Out-of-core: a chunked DataSource streams morsel-by-morsel through
+    :func:`~repro.relational.planner.stream.compile_plan_streamed`.  With
+    ``ctx.morsel_rows`` set and plain in-memory tables, the one table
+    larger than ``morsel_rows`` is wrapped in a chunked
+    :class:`~repro.relational.source.MorselView` automatically.  The
+    planner prices streamed shuffles at one morsel (``morsel_rows``
+    reaches :func:`plan_physical`), and the plan-cache key covers it.
     """
-    if stats == "collect":
-        from .. import stats as rstats
-
-        stats = rstats.collect_stats({t: tables[t] for t in pq.tables})
-    catalog = {t: tables[t].capacity for t in pq.tables}
+    ctx = resolve_context(ctx, legacy, where="run_query")
+    srcs = {t: as_source(tables[t]) for t in pq.tables}
+    if ctx.morsel_rows is not None and not any(
+        s.is_chunked for s in srcs.values()
+    ):
+        big = [t for t in pq.tables if srcs[t].capacity > ctx.morsel_rows]
+        if len(big) > 1:
+            raise ValueError(
+                f"morsel_rows={ctx.morsel_rows} would stream {big}, but "
+                "streamed execution supports one chunked relation; chunk "
+                "exactly one source (or raise morsel_rows)"
+            )
+        if big:
+            srcs[big[0]] = MorselView(
+                srcs[big[0]].materialize(), ctx.morsel_rows
+            )
+    chunked = [t for t in pq.tables if srcs[t].is_chunked]
+    if ctx.stats_mode is StatsMode.COLLECT:
+        if chunked:
+            raise ValueError(
+                "StatsMode.COLLECT samples in-memory tables; streamed "
+                "sources plan with STATIC stats or a pre-collected PROFILE"
+            )
+        stats = ctx.planner_stats(
+            {t: srcs[t].materialize() for t in pq.tables}
+        )
+    else:
+        stats = ctx.planner_stats()
+    catalog = {t: srcs[t].capacity for t in pq.tables}
+    morsel = srcs[chunked[0]].chunk_rows if chunked else None
     phys = pq.plan(
-        catalog, num_shards, num_pods=num_pods, cfg=cfg,
-        cross_pod=cross_pod, stats=stats,
+        catalog, ctx.num_shards, num_pods=ctx.num_pods, cfg=ctx.cfg,
+        cross_pod=ctx.cross_pod, stats=stats, morsel_rows=morsel,
     )
-    raw = execute_plan(
-        phys, tables, impl=impl, pack_impl=pack_impl, num_chunks=num_chunks
-    )
+    if chunked:
+        from .stream import compile_plan_streamed
+
+        raw = compile_plan_streamed(phys, srcs, ctx)()
+    else:
+        raw = execute_plan(phys, srcs, ctx)
     return pq.finalize(raw) if pq.finalize else raw
 
 
-def explain_query(
-    pq: PlannedQuery,
-    catalog: L.Catalog,
-    num_shards: int,
-    num_pods: int = 1,
-    cfg: PlannerConfig | None = None,
-    stats: dict | None = None,
-) -> str:
+def explain_query(pq: PlannedQuery, catalog: L.Catalog, ctx=None, **legacy) -> str:
+    """Render the physical plan the context would execute.
+
+    ``StatsMode.COLLECT`` is not explainable without the tables — collect a
+    profile first and pass it via ``StatsMode.PROFILE``.
+    """
+    ctx = resolve_context(ctx, legacy, where="explain_query")
     return pq.plan(
-        catalog, num_shards, num_pods=num_pods, cfg=cfg, stats=stats
+        catalog, ctx.num_shards, num_pods=ctx.num_pods, cfg=ctx.cfg,
+        cross_pod=ctx.cross_pod, stats=ctx.planner_stats(),
     ).explain()
 
 

@@ -49,6 +49,7 @@ from repro.core.autotune import tune_shared_config
 from repro.core.multiplexer import make_multiplexer
 from repro.core.topology import ChipSpec, V5E
 from repro.relational import stats as rstats
+from repro.relational.context import ExecutionContext, StatsMode, resolve_context
 from repro.relational.planner.executor import _mesh
 from repro.relational.planner.physical import PhysicalPlan, plan_physical
 from repro.relational.planner.plan_cache import PlanCache, PlanKey, plan_key
@@ -81,33 +82,43 @@ class QueryServeEngine:
     """Admit a stream of :class:`QueryRequest`\\ s onto one shared mesh.
 
     ``tables`` is the engine's resident data (the jitted executors close
-    over it — one engine, one table set).  ``stats="collect"`` profiles the
-    tables once at construction so plans are skew-aware; a profile dict
-    passes through; ``None`` keeps static plans.  ``cache`` defaults to a
-    fresh in-process :class:`PlanCache`; hand one a ``cache_dir`` (or set
-    ``REPRO_PLAN_CACHE_DIR``) and plans persist across engine processes.
+    over it — one engine, one table set).  ``ctx`` is the engine-wide
+    :class:`~repro.relational.context.ExecutionContext`: mesh shape,
+    multiplexer knobs, and stats mode (``StatsMode.COLLECT`` profiles the
+    tables once at construction so plans are skew-aware;
+    ``StatsMode.PROFILE`` uses ``ctx.stats_profile``; STATIC keeps static
+    plans).  The old ``num_shards=``/``num_pods=``/``stats=`` kwargs still
+    resolve for one release through the deprecation shim.  ``cache``
+    defaults to a fresh in-process :class:`PlanCache`; hand one a
+    ``cache_dir`` (or set ``REPRO_PLAN_CACHE_DIR``) and plans persist
+    across engine processes.
     """
 
     def __init__(
         self,
         tables: Mapping[str, Table],
-        num_shards: int,
-        num_pods: int = 1,
+        ctx: ExecutionContext | None = None,
+        *,
         num_slots: int = 2,
         cache: PlanCache | None = None,
-        stats: Any = None,
         chip: ChipSpec = V5E,
         topology: str = "ring",
         templates: Sequence[PlannedQuery] | None = None,
+        **legacy: Any,
     ):
+        ctx = resolve_context(ctx, legacy, where="QueryServeEngine")
+        self.ctx = ctx
         self.tables = dict(tables)
-        self.num_shards = num_shards
-        self.num_pods = num_pods
+        self.num_shards = ctx.num_shards
+        self.num_pods = ctx.num_pods
         self.alloc = SlotAllocator(num_slots)
         self.cache = cache if cache is not None else PlanCache()
-        if stats == "collect":
-            stats = rstats.collect_stats(self.tables)
-        self.stats = stats
+        if ctx.stats_mode is StatsMode.COLLECT:
+            self.stats = rstats.collect_stats(self.tables)
+        elif ctx.stats_mode is StatsMode.PROFILE:
+            self.stats = dict(ctx.stats_profile)
+        else:
+            self.stats = None
         self.chip = chip
         self.topology = topology
         self.rounds = 0
@@ -170,6 +181,7 @@ class QueryServeEngine:
         runner, exec_hit = self.cache.executor(
             key, plan, self.tables,
             data_token=self._data_token, mux=self._ensure_mux(),
+            ctx=self.ctx,
         )
         req.plan_cache_hit = plan_hit
         req.executor_cache_hit = exec_hit

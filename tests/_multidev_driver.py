@@ -22,6 +22,7 @@ from repro.compat import shard_map  # noqa: E402
 from repro.core import exchange  # noqa: E402
 from repro.distributed.sharding import MeshContext, default_rules, mesh_context  # noqa: E402
 from repro.launch.mesh import make_test_mesh  # noqa: E402
+from repro.relational.context import ExecutionContext as Ctx  # noqa: E402
 
 
 def _mesh1d():
@@ -298,7 +299,7 @@ def scenario_distributed_q17():
     from repro.relational.distributed import q17_distributed
 
     tabs = datagen.gen_all(0.01)
-    got = q17_distributed(tabs["lineitem"], tabs["part"], num_shards=8)
+    got = q17_distributed(tabs["lineitem"], tabs["part"], Ctx(num_shards=8))
     want = oracle.q17_oracle(tabs["lineitem"], tabs["part"])
     np.testing.assert_allclose(float(got), want, rtol=1e-3)
     print("PASS distributed_q17")
@@ -311,9 +312,9 @@ def scenario_distributed_q14_q19():
 
     tabs = datagen.gen_all(0.01)
     li, part = tabs["lineitem"], tabs["part"]
-    got14 = float(q14_distributed(li, part, num_shards=8))
+    got14 = float(q14_distributed(li, part, Ctx(num_shards=8)))
     np.testing.assert_allclose(got14, oracle.q14_oracle(li, part), rtol=1e-3)
-    got19 = float(q19_distributed(li, part, num_shards=8))
+    got19 = float(q19_distributed(li, part, Ctx(num_shards=8)))
     np.testing.assert_allclose(got19, oracle.q19_oracle(li, part), rtol=1e-3)
     print("PASS distributed_q14_q19")
 
@@ -587,15 +588,15 @@ def scenario_tpch_pod_mesh_1proc():
     want17 = oracle.q17_oracle(li, pt)
     for cross_pod in ("broadcast", "reshard"):
         got = q17_distributed(
-            li, pt, num_shards=8, num_pods=2, impl="round_robin",
-            pack_impl="pallas", cross_pod=cross_pod,
+            li, pt, Ctx(num_shards=8, num_pods=2, impl="round_robin",
+                        pack_impl="pallas", cross_pod=cross_pod),
         )
         np.testing.assert_allclose(float(got), want17, rtol=1e-3,
                                    err_msg=cross_pod)
 
-    flat = q3_distributed(tabs["customer"], tabs["orders"], li, num_shards=8)
+    flat = q3_distributed(tabs["customer"], tabs["orders"], li, Ctx(num_shards=8))
     pod = q3_distributed(tabs["customer"], tabs["orders"], li,
-                         num_shards=8, num_pods=2)
+                         Ctx(num_shards=8, num_pods=2))
     for k in flat:
         np.testing.assert_array_equal(np.asarray(flat[k]), np.asarray(pod[k]),
                                       err_msg=k)
@@ -613,17 +614,17 @@ def scenario_distributed_q1_q6():
     li = tabs["lineitem"]
     want1 = oracle.q1_oracle(li)
     want6 = oracle.q6_oracle(li)
-    flat1 = q1_distributed(li, num_shards=8)
+    flat1 = q1_distributed(li, Ctx(num_shards=8))
     for k in want1:
         np.testing.assert_allclose(np.asarray(flat1[k]), want1[k], rtol=1e-4,
                                    err_msg=k)
-    pod1 = q1_distributed(li, num_shards=8, num_pods=2)
+    pod1 = q1_distributed(li, Ctx(num_shards=8, num_pods=2))
     for k in flat1:
         np.testing.assert_allclose(np.asarray(flat1[k]), np.asarray(pod1[k]),
                                    rtol=1e-6, err_msg=f"pod/{k}")
-    flat6 = float(q6_distributed(li, num_shards=8))
+    flat6 = float(q6_distributed(li, Ctx(num_shards=8)))
     np.testing.assert_allclose(flat6, want6, rtol=1e-4)
-    pod6 = float(q6_distributed(li, num_shards=8, num_pods=2))
+    pod6 = float(q6_distributed(li, Ctx(num_shards=8, num_pods=2)))
     np.testing.assert_allclose(pod6, flat6, rtol=1e-6)
     print("PASS distributed_q1_q6")
 
@@ -640,19 +641,19 @@ def scenario_planner_new_queries():
     tabs = datagen.gen_all(0.01)
     li, od, cu = tabs["lineitem"], tabs["orders"], tabs["customer"]
 
-    got4 = q4_distributed(li, od, num_shards=8)
+    got4 = q4_distributed(li, od, Ctx(num_shards=8))
     want4 = oracle.q4_oracle(li, od)
     assert want4.sum() > 0
     np.testing.assert_allclose(np.asarray(got4["order_count"]), want4)
 
-    got12 = q12_distributed(li, od, num_shards=8)
+    got12 = q12_distributed(li, od, Ctx(num_shards=8))
     want12 = oracle.q12_oracle(li, od)
     np.testing.assert_allclose(got12["high_line_count"],
                                want12["high_line_count"])
     np.testing.assert_allclose(got12["low_line_count"],
                                want12["low_line_count"])
 
-    got18 = q18_distributed(li, od, cu, num_shards=8)
+    got18 = q18_distributed(li, od, cu, Ctx(num_shards=8))
     want18 = oracle.q18_oracle(li, od, cu)
     assert len(want18["o_orderkey"]) > 0
     got_map = {int(k): (int(tp), float(sq)) for k, tp, sq in zip(
@@ -661,7 +662,7 @@ def scenario_planner_new_queries():
         want18["o_orderkey"], want18["o_totalprice"], want18["sum_qty"])}
     assert got_map == want_map, (got_map, want_map)
 
-    pod18 = q18_distributed(li, od, cu, num_shards=8, num_pods=2)
+    pod18 = q18_distributed(li, od, cu, Ctx(num_shards=8, num_pods=2))
     for k in got18:
         np.testing.assert_array_equal(
             np.asarray(got18[k]), np.asarray(pod18[k]), err_msg=f"pod/{k}"
@@ -676,16 +677,18 @@ def scenario_tpch_pack_equiv():
     from repro.relational.distributed import q17_distributed, q3_distributed
 
     tabs = datagen.gen_all(0.01)
-    a17 = q17_distributed(tabs["lineitem"], tabs["part"], 8,
-                          impl="xla", pack_impl="xla")
-    b17 = q17_distributed(tabs["lineitem"], tabs["part"], 8,
-                          impl="round_robin", pack_impl="pallas")
+    a17 = q17_distributed(tabs["lineitem"], tabs["part"],
+                          Ctx(num_shards=8, impl="xla", pack_impl="xla"))
+    b17 = q17_distributed(tabs["lineitem"], tabs["part"],
+                          Ctx(num_shards=8, impl="round_robin",
+                              pack_impl="pallas"))
     np.testing.assert_array_equal(np.asarray(a17), np.asarray(b17))
 
-    a3 = q3_distributed(tabs["customer"], tabs["orders"], tabs["lineitem"], 8,
-                        impl="xla", pack_impl="xla")
-    b3 = q3_distributed(tabs["customer"], tabs["orders"], tabs["lineitem"], 8,
-                        impl="round_robin", pack_impl="pallas")
+    a3 = q3_distributed(tabs["customer"], tabs["orders"], tabs["lineitem"],
+                        Ctx(num_shards=8, impl="xla", pack_impl="xla"))
+    b3 = q3_distributed(tabs["customer"], tabs["orders"], tabs["lineitem"],
+                        Ctx(num_shards=8, impl="round_robin",
+                            pack_impl="pallas"))
     for k in a3:
         np.testing.assert_array_equal(np.asarray(a3[k]), np.asarray(b3[k]))
     print("PASS tpch_pack_equiv")
@@ -779,7 +782,7 @@ def scenario_qserve_cached():
     names = sorted({t for pq in templates for t in pq.tables})
     tables = {name: tabs[name] for name in names}
     engine = QueryServeEngine(
-        tables, num_shards=8, num_slots=3, cache=PlanCache(),
+        tables, Ctx(num_shards=8), num_slots=3, cache=PlanCache(),
         templates=templates,
     )
     cold = engine.serve([QueryRequest("t", pq) for pq in templates])
@@ -853,6 +856,101 @@ def scenario_exchange_report():
                 np.asarray(results[0][k]), np.asarray(got[k])
             )
     print("PASS exchange_report")
+
+
+def _streamed_vs_resident(pq, sources, ctx):
+    from repro.relational.planner.executor import execute_plan
+    from repro.relational.planner.stream import compile_plan_streamed
+
+    mat = {t: sources[t].materialize() for t in pq.tables}
+    catalog = {t: sources[t].capacity for t in pq.tables}
+    plan = pq.plan(catalog, ctx.num_shards)
+    oracle = pq.finalize(execute_plan(plan, mat))
+    run = compile_plan_streamed(plan, sources, ctx)
+    return oracle, pq.finalize(run()), run.stats, plan
+
+
+def _assert_close(oracle, got):
+    if not isinstance(oracle, dict):
+        oracle, got = {"r": oracle}, {"r": got}
+    for k in oracle:
+        o, g = np.asarray(oracle[k]), np.asarray(got[k])
+        if o.dtype.kind == "f":
+            np.testing.assert_allclose(g, o, rtol=1e-3, err_msg=k)
+        else:
+            np.testing.assert_array_equal(g, o, err_msg=k)
+
+
+def scenario_oocore_streamed():
+    """Q17/Q18 morsel-streamed over 8 shards == in-memory run, same mesh.
+
+    The streamed table is chunked so only one morsel's shard slice is
+    device-resident at a time; a device_row_budget below the full table
+    capacity proves the in-memory path could not have run."""
+    from repro.relational import datagen
+    from repro.relational.planner.tpch import q17, q18
+    from repro.relational.source import MorselView, as_source
+
+    tabs = datagen.gen_all(0.01)
+    li = tabs["lineitem"]
+    budget = li.capacity // 2
+    ctx = Ctx(num_shards=8, device_row_budget=budget)
+    assert li.capacity > budget
+
+    src17 = {"lineitem": MorselView(li, morsel_rows=4096),
+             "part": as_source(tabs["part"])}
+    oracle, got, stats, _ = _streamed_vs_resident(q17(), src17, ctx)
+    _assert_close(oracle, got)
+    assert stats["passes"] == 2 and stats["spilled_rows"] == 0
+
+    src18 = {"lineitem": MorselView(li, morsel_rows=4096),
+             "orders": as_source(tabs["orders"]),
+             "customer": as_source(tabs["customer"])}
+    oracle, got, stats, _ = _streamed_vs_resident(q18(), src18, ctx)
+    _assert_close(oracle, got)
+    assert len(np.asarray(got["o_orderkey"]))  # non-vacuous top-k
+    print("PASS oocore_streamed")
+
+
+def scenario_oocore_spill():
+    """Forced exchange overflow: without spill the run raises; with
+    ``spill=True`` the overflow lands in the host overflow partition, drains
+    back through the same exchange, and the result matches the no-pressure
+    run bit-for-bit."""
+    from repro.relational import datagen
+    from repro.relational.planner.stream import compile_plan_streamed
+    from repro.relational.planner.tpch import q18
+    from repro.relational.source import MorselView, as_source
+
+    tabs = datagen.gen_all(0.01)
+    pq = q18()
+    sources = {"lineitem": MorselView(tabs["lineitem"], morsel_rows=4096),
+               "orders": as_source(tabs["orders"]),
+               "customer": as_source(tabs["customer"])}
+    oracle, got, stats, plan = _streamed_vs_resident(
+        pq, sources, Ctx(num_shards=8))
+    _assert_close(oracle, got)
+    assert stats["spilled_rows"] == 0
+
+    # Q18 shuffles the unfiltered lineitem stream by l_orderkey: a 16-row
+    # message capacity guarantees overflow on every morsel.
+    try:
+        compile_plan_streamed(
+            plan, sources, Ctx(num_shards=8, exchange_rows=16))()
+    except RuntimeError as e:
+        assert "dropped" in str(e), e
+    else:
+        raise AssertionError("overflow without spill must raise")
+
+    run = compile_plan_streamed(
+        plan, sources, Ctx(num_shards=8, exchange_rows=16, spill=True))
+    spilled = pq.finalize(run())
+    assert run.stats["spilled_rows"] > 0, run.stats
+    assert run.stats["drain_rounds"] > 0, run.stats
+    for k in oracle:
+        np.testing.assert_array_equal(
+            np.asarray(spilled[k]), np.asarray(oracle[k]), err_msg=k)
+    print("PASS oocore_spill")
 
 
 SCENARIOS = {

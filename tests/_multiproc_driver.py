@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 from repro.compat import fetch, shard_map  # noqa: E402
 from repro.core import exchange  # noqa: E402
 from repro.launch.mesh import make_pod_mesh, make_production_mesh  # noqa: E402
+from repro.relational.context import ExecutionContext  # noqa: E402
 
 
 def _pod_mesh():
@@ -141,7 +142,8 @@ def scenario_tpch_pod_mesh():
     tabs = datagen.gen_all(0.01)
 
     got17 = q17_distributed(
-        tabs["lineitem"], tabs["part"], num_shards=pods * n, num_pods=pods
+        tabs["lineitem"], tabs["part"],
+        ExecutionContext(num_shards=pods * n, num_pods=pods),
     )
     np.testing.assert_allclose(
         float(got17), oracle.q17_oracle(tabs["lineitem"], tabs["part"]),
@@ -150,7 +152,7 @@ def scenario_tpch_pod_mesh():
 
     got3 = q3_distributed(
         tabs["customer"], tabs["orders"], tabs["lineitem"],
-        num_shards=pods * n, num_pods=pods,
+        ExecutionContext(num_shards=pods * n, num_pods=pods),
     )
     want3 = oracle.q3_oracle(tabs["customer"], tabs["orders"], tabs["lineitem"])
     assert [int(k) for k in got3["o_orderkey"]] == \
@@ -278,6 +280,44 @@ def scenario_salted_pod_shuffle():
     assert float(rep0["overload"]) == plain_over
     assert salted_over < float(rep0["overload"])
     print("PASS salted_pod_shuffle")
+
+
+def scenario_oocore_pod_stream():
+    """Morsel-streamed Q17 ACROSS the process boundary: the chunked lineitem
+    stream feeds the two-level (coarse cross-pod + fine in-pod) exchange one
+    morsel at a time, result equal to the in-memory pod-mesh run."""
+    from repro.relational import datagen
+    from repro.relational.planner import tpch
+    from repro.relational.planner.executor import execute_plan
+    from repro.relational.planner.stream import compile_plan_streamed
+    from repro.relational.source import MorselView, as_source
+
+    mesh = _pod_mesh()
+    pods, n = mesh.devices.shape
+    tabs = datagen.gen_all(0.01)
+    pq = tpch.q17()
+    sources = {"lineitem": MorselView(tabs["lineitem"], morsel_rows=4096),
+               "part": as_source(tabs["part"])}
+    mat = {t: sources[t].materialize() for t in pq.tables}
+    catalog = {t: sources[t].capacity for t in pq.tables}
+    plan = pq.plan(catalog, pods * n, num_pods=pods)
+    want = float(pq.finalize(execute_plan(plan, mat)))
+
+    ctx = ExecutionContext(num_shards=pods * n, num_pods=pods)
+    run = compile_plan_streamed(plan, sources, ctx)
+    got = float(pq.finalize(run()))
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+    assert run.stats["passes"] == 2, run.stats
+
+    # spill is a single-level-mesh feature: over DCI it must refuse at
+    # compile time, never drop rows at run time
+    try:
+        compile_plan_streamed(plan, sources, ctx.with_(spill=True))
+    except NotImplementedError:
+        pass
+    else:
+        raise AssertionError("spill on the pod mesh did not raise")
+    print("PASS oocore_pod_stream")
 
 
 SCENARIOS = {

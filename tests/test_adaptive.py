@@ -24,6 +24,7 @@ import pytest
 from repro.core.autotune import TableStats, exchange_makespan
 from repro.relational import datagen, oracle
 from repro.relational import stats as rstats
+from repro.relational.context import ExecutionContext, StatsMode
 from repro.relational.planner import tpch
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden_plans")
@@ -46,6 +47,12 @@ def _stats_for(pq, tables):
     return rstats.collect_stats({t: tables[t] for t in pq.tables})
 
 
+def _ctx8(stats):
+    return ExecutionContext(
+        num_shards=8, stats_mode=StatsMode.PROFILE, stats_profile=stats,
+    )
+
+
 def _catalog(pq, tables):
     return {t: tables[t].capacity for t in pq.tables}
 
@@ -58,8 +65,8 @@ def _catalog(pq, tables):
 def test_uniform_stats_keep_static_plans(query, uniform_tables):
     pq = tpch.ALL_QUERIES[query]()
     text = tpch.explain_query(
-        pq, tpch.tpch_catalog(0.01), 8,
-        stats=_stats_for(pq, uniform_tables),
+        pq, tpch.tpch_catalog(0.01),
+        _ctx8(_stats_for(pq, uniform_tables)),
     )
     with open(os.path.join(GOLDEN_DIR, f"{query}.txt")) as f:
         assert text == f.read(), (
@@ -85,7 +92,7 @@ def test_uniform_profile_has_no_heavy_hitters(uniform_tables):
 def test_zipf_stats_flip_to_salted_golden(fname, query, zipf_tables):
     pq = tpch.ALL_QUERIES[query]()
     text = tpch.explain_query(
-        pq, _catalog(pq, zipf_tables), 8, stats=_stats_for(pq, zipf_tables)
+        pq, _catalog(pq, zipf_tables), _ctx8(_stats_for(pq, zipf_tables))
     )
     assert "salted x" in text and "GroupByCombine" in text
     path = os.path.join(GOLDEN_DIR, f"{fname}.txt")
@@ -120,7 +127,7 @@ def test_orders_side_stays_plain_under_zipf(zipf_tables):
     shuffle must stay a plain hash even when lineitem flips."""
     pq = tpch.q18()
     text = tpch.explain_query(
-        pq, _catalog(pq, zipf_tables), 8, stats=_stats_for(pq, zipf_tables)
+        pq, _catalog(pq, zipf_tables), _ctx8(_stats_for(pq, zipf_tables))
     )
     assert "shuffle by o_orderkey]" in text  # no salted suffix on that edge
 
@@ -131,7 +138,8 @@ def test_orders_side_stays_plain_under_zipf(zipf_tables):
 
 def test_salted_q17_matches_oracle_single_device(zipf_tables):
     pq = tpch.q17(brand=11, container=25)  # selects the heaviest part
-    got = float(tpch.run_query(pq, zipf_tables, num_shards=1, stats="collect"))
+    got = float(tpch.run_query(pq, zipf_tables, ExecutionContext(
+        num_shards=1, stats_mode=StatsMode.COLLECT)))
     want = oracle.q17_oracle(
         zipf_tables["lineitem"], zipf_tables["part"], 11, 25
     )
@@ -141,7 +149,8 @@ def test_salted_q17_matches_oracle_single_device(zipf_tables):
 
 def test_salted_q18_matches_oracle_single_device(zipf_tables):
     pq = tpch.q18()
-    got = tpch.run_query(pq, zipf_tables, num_shards=1, stats="collect")
+    got = tpch.run_query(pq, zipf_tables, ExecutionContext(
+        num_shards=1, stats_mode=StatsMode.COLLECT))
     want = oracle.q18_oracle(
         zipf_tables["lineitem"], zipf_tables["orders"], zipf_tables["customer"]
     )

@@ -32,6 +32,8 @@ SCENARIOS = [
     "skewed_q17",
     "qserve_cached",
     "exchange_report",
+    "oocore_streamed",
+    "oocore_spill",
 ]
 
 

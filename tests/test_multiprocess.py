@@ -28,6 +28,7 @@ SCENARIOS = [
     "tpch_pod_mesh",
     "ep_dispatch_two_level",
     "salted_pod_shuffle",
+    "oocore_pod_stream",
 ]
 
 _PROBE = """

@@ -1,0 +1,203 @@
+"""Out-of-core morsel streaming: streamed == in-memory oracle.
+
+The tentpole contract, single-device half (the 8-device and 2-process
+variants live in the multidevice/multiprocess drivers):
+
+* Q1 (one-pass dense group-by) and Q17 (two-pass: stream, re-scan) run
+  morsel-streamed over a chunked source and match the in-memory oracle —
+  bit-identical for integer columns, rtol 1e-3 for float aggregates
+  (partial-sum order differs);
+* streamed execution clears a ``device_row_budget`` that in-memory
+  execution *refuses* — the full table never has to fit on the device;
+* chunked generator sources (``gen_lineitem_chunked``) produce the same
+  bytes as the monolithic generator, chunk seeding included;
+* the error surface: COLLECT stats cannot stream, two oversized tables
+  cannot both stream, budget violations name the offender.
+"""
+
+import numpy as np
+import pytest
+
+from repro.relational import datagen
+from repro.relational.context import ExecutionContext, StatsMode
+from repro.relational.planner import tpch
+from repro.relational.planner.executor import execute_plan
+from repro.relational.planner.stream import compile_plan_streamed
+from repro.relational.source import GeneratorSource, MorselView, as_source
+
+SF = 0.002
+CTX1 = ExecutionContext(num_shards=1)
+
+
+@pytest.fixture(scope="module")
+def tabs():
+    return {
+        "lineitem": datagen.gen_lineitem(SF),
+        "part": datagen.gen_part(SF),
+    }
+
+
+def _assert_results_match(oracle, got, rtol=1e-3):
+    if not isinstance(oracle, dict):  # scalar finalize (q6, q17)
+        oracle, got = {"result": oracle}, {"result": got}
+    assert set(oracle) == set(got)
+    for k in oracle:
+        o, g = np.asarray(oracle[k]), np.asarray(got[k])
+        if o.dtype.kind == "f":
+            np.testing.assert_allclose(g, o, rtol=rtol, err_msg=k)
+        else:
+            np.testing.assert_array_equal(g, o, err_msg=k)
+
+
+def _streamed_vs_oracle(pq, sources, ctx):
+    mat = {t: sources[t].materialize() for t in pq.tables}
+    catalog = {t: sources[t].capacity for t in pq.tables}
+    plan = pq.plan(catalog, ctx.num_shards)
+    oracle = pq.finalize(execute_plan(plan, mat))
+    run = compile_plan_streamed(plan, sources, ctx)
+    got = pq.finalize(run())
+    return oracle, got, run.stats
+
+
+# ---------------------------------------------------------------------------
+# Streamed == oracle, single device.
+# ---------------------------------------------------------------------------
+
+def test_q1_streams_one_pass(tabs):
+    pq = tpch.q1()
+    sources = {"lineitem": MorselView(tabs["lineitem"], morsel_rows=700)}
+    oracle, got, stats = _streamed_vs_oracle(pq, sources, CTX1)
+    _assert_results_match(oracle, got)
+    # integer count must be *bit*-identical, not just close
+    np.testing.assert_array_equal(
+        np.asarray(got["count_order"]), np.asarray(oracle["count_order"])
+    )
+    assert stats["passes"] == 1
+    assert stats["morsels"] == sources["lineitem"].num_chunks
+    assert 0.0 <= stats["prefetch_overlap_fraction"] <= 1.0
+
+
+def test_q17_streams_two_passes_with_rescan(tabs):
+    pq = tpch.q17()
+    sources = {
+        "lineitem": MorselView(tabs["lineitem"], morsel_rows=700),
+        "part": as_source(tabs["part"]),
+    }
+    oracle, got, stats = _streamed_vs_oracle(pq, sources, CTX1)
+    _assert_results_match(oracle, got)
+    assert stats["passes"] == 2
+    # pass 2 re-scans the stream: more morsel steps than chunks
+    assert stats["morsels"] == 2 * sources["lineitem"].num_chunks
+
+
+def test_run_query_auto_wraps_oversized_table(tabs):
+    """``ctx.morsel_rows`` alone makes run_query stream the big table."""
+    pq = tpch.q17()
+    tables = {"lineitem": tabs["lineitem"], "part": tabs["part"]}
+    oracle = tpch.run_query(pq, tables, CTX1)
+    got = tpch.run_query(pq, tables, CTX1.with_(morsel_rows=700))
+    _assert_results_match(oracle, got)
+
+
+# ---------------------------------------------------------------------------
+# The point of the exercise: the table never fits on the device.
+# ---------------------------------------------------------------------------
+
+def test_streaming_clears_budget_in_memory_execution_refuses(tabs):
+    li = tabs["lineitem"]
+    budget = li.capacity // 4
+    pq = tpch.q1()
+    ctx = CTX1.with_(device_row_budget=budget)
+
+    with pytest.raises(ValueError, match="device_row_budget"):
+        execute_plan(pq.plan({"lineitem": li.capacity}, 1), {"lineitem": li},
+                     ctx)
+
+    morsel = budget // 2
+    src = MorselView(li, morsel_rows=morsel)
+    assert li.capacity > budget  # the full table exceeds the budget
+    oracle = tpch.run_query(pq, {"lineitem": li}, CTX1)
+    got = tpch.run_query(pq, {"lineitem": src}, ctx)
+    _assert_results_match(oracle, got)
+
+
+def test_morsel_exceeding_budget_rejected(tabs):
+    li = tabs["lineitem"]
+    pq = tpch.q1()
+    src = MorselView(li, morsel_rows=1024)
+    ctx = CTX1.with_(device_row_budget=512)
+    plan = pq.plan({"lineitem": src.capacity}, 1)
+    with pytest.raises(ValueError, match="device_row_budget"):
+        compile_plan_streamed(plan, {"lineitem": src}, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Chunked generator sources: never materialize the full table on the host.
+# ---------------------------------------------------------------------------
+
+def test_gen_lineitem_chunked_materializes_to_chunk_concat():
+    """materialize() is the streaming oracle: exactly the chunks, in order,
+    with the monolithic generator's schema."""
+    src = datagen.gen_lineitem_chunked(SF, num_chunks=4)
+    assert isinstance(src, GeneratorSource) and src.is_chunked
+    whole = src.materialize()
+    mono = datagen.gen_lineitem(SF)
+    assert set(whole.columns) == set(mono.columns)
+    assert whole.capacity == src.num_chunks * src.chunk_rows >= mono.capacity
+    off = 0
+    for chunk in src.chunks():
+        for c in chunk.columns:
+            np.testing.assert_array_equal(
+                np.asarray(whole[c])[off:off + src.chunk_rows],
+                np.asarray(chunk[c]), c,
+            )
+        off += src.chunk_rows
+
+
+def test_generator_source_streams_without_materializing():
+    src = datagen.gen_lineitem_chunked(SF, num_chunks=4)
+    pq = tpch.q6()
+    oracle = tpch.run_query(pq, {"lineitem": src.materialize()}, CTX1)
+    got = tpch.run_query(pq, {"lineitem": src}, CTX1)
+    _assert_results_match(oracle, got)
+
+
+def test_chunks_are_deterministic_and_independent():
+    src = datagen.gen_lineitem_chunked(SF, num_chunks=4)
+    third_a = list(src.chunks())[2]
+    third_b = list(src.chunks())[2]  # fresh iteration, same chunk
+    for c in third_a.columns:
+        np.testing.assert_array_equal(
+            np.asarray(third_a[c]), np.asarray(third_b[c]), c
+        )
+
+
+# ---------------------------------------------------------------------------
+# Error surface.
+# ---------------------------------------------------------------------------
+
+def test_collect_stats_cannot_stream(tabs):
+    src = MorselView(tabs["lineitem"], morsel_rows=700)
+    ctx = CTX1.with_(stats_mode=StatsMode.COLLECT)
+    with pytest.raises(ValueError, match="STATIC stats or a pre-collected"):
+        tpch.run_query(tpch.q1(), {"lineitem": src}, ctx)
+
+
+def test_two_oversized_tables_cannot_both_stream(tabs):
+    ctx = CTX1.with_(morsel_rows=8)  # everything is "too big"
+    with pytest.raises(ValueError, match="one chunked relation"):
+        tpch.run_query(
+            tpch.q17(),
+            {"lineitem": tabs["lineitem"], "part": tabs["part"]},
+            ctx,
+        )
+
+
+def test_chunked_source_rejected_by_in_memory_compile(tabs):
+    src = MorselView(tabs["lineitem"], morsel_rows=700)
+    pq = tpch.q1()
+    from repro.relational.planner.executor import compile_plan
+
+    plan = pq.plan({"lineitem": src.capacity}, 1)
+    with pytest.raises(ValueError, match="chunked"):
+        compile_plan(plan, {"lineitem": src})

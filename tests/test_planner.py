@@ -18,6 +18,7 @@ import numpy as np
 import pytest
 
 from repro.relational import datagen, oracle
+from repro.relational.context import ExecutionContext
 from repro.relational.planner import (
     Aggregate,
     Filter,
@@ -32,6 +33,8 @@ from repro.relational.planner import (
 )
 from repro.relational.planner import tpch
 from repro.relational.table import Table
+
+CTX1 = ExecutionContext(num_shards=1)
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden_plans")
 
@@ -291,8 +294,8 @@ GOLDEN_CASES = [
 @pytest.mark.parametrize("fname,query,shards,pods", GOLDEN_CASES)
 def test_golden_explain(fname, query, shards, pods):
     text = tpch.explain_query(
-        tpch.ALL_QUERIES[query](), tpch.tpch_catalog(0.01), shards,
-        num_pods=pods,
+        tpch.ALL_QUERIES[query](), tpch.tpch_catalog(0.01),
+        ExecutionContext(num_shards=shards, num_pods=pods),
     )
     path = os.path.join(GOLDEN_DIR, f"{fname}.txt")
     if os.environ.get("REPRO_UPDATE_GOLDEN"):
@@ -313,27 +316,27 @@ def test_golden_explain(fname, query, shards, pods):
 # ---------------------------------------------------------------------------
 
 def test_q1_planned_matches_oracle(tables):
-    got = tpch.run_query(tpch.q1(), _tpch_tables(tables), num_shards=1)
+    got = tpch.run_query(tpch.q1(), _tpch_tables(tables), CTX1)
     want = oracle.q1_oracle(tables["lineitem"])
     for k in want:
         np.testing.assert_allclose(np.asarray(got[k]), want[k], rtol=1e-4)
 
 
 def test_q6_planned_matches_oracle(tables):
-    got = float(tpch.run_query(tpch.q6(), _tpch_tables(tables), num_shards=1))
+    got = float(tpch.run_query(tpch.q6(), _tpch_tables(tables), CTX1))
     np.testing.assert_allclose(got, oracle.q6_oracle(tables["lineitem"]),
                                rtol=1e-4)
 
 
 def test_q17_planned_matches_oracle(tables):
     got = float(tpch.run_query(tpch.q17(brand=1, container=0),
-                               _tpch_tables(tables), num_shards=1))
+                               _tpch_tables(tables), CTX1))
     want = oracle.q17_oracle(tables["lineitem"], tables["part"], 1, 0)
     np.testing.assert_allclose(got, want, rtol=1e-3)
 
 
 def test_q3_planned_matches_oracle(tables):
-    got = tpch.run_query(tpch.q3(), _tpch_tables(tables), num_shards=1)
+    got = tpch.run_query(tpch.q3(), _tpch_tables(tables), CTX1)
     want = oracle.q3_oracle(tables["customer"], tables["orders"],
                             tables["lineitem"])
     assert [int(k) for k in got["o_orderkey"]] == \
@@ -344,28 +347,28 @@ def test_q3_planned_matches_oracle(tables):
 
 
 def test_q14_planned_matches_oracle(tables):
-    got = float(tpch.run_query(tpch.q14(), _tpch_tables(tables), num_shards=1))
+    got = float(tpch.run_query(tpch.q14(), _tpch_tables(tables), CTX1))
     np.testing.assert_allclose(
         got, oracle.q14_oracle(tables["lineitem"], tables["part"]), rtol=1e-3
     )
 
 
 def test_q19_planned_matches_oracle(tables):
-    got = float(tpch.run_query(tpch.q19(), _tpch_tables(tables), num_shards=1))
+    got = float(tpch.run_query(tpch.q19(), _tpch_tables(tables), CTX1))
     np.testing.assert_allclose(
         got, oracle.q19_oracle(tables["lineitem"], tables["part"]), rtol=1e-4
     )
 
 
 def test_q4_planned_matches_oracle(tables):
-    got = tpch.run_query(tpch.q4(), _tpch_tables(tables), num_shards=1)
+    got = tpch.run_query(tpch.q4(), _tpch_tables(tables), CTX1)
     want = oracle.q4_oracle(tables["lineitem"], tables["orders"])
     np.testing.assert_allclose(np.asarray(got["order_count"]), want)
     assert want.sum() > 0  # the EXISTS actually selects something
 
 
 def test_q12_planned_matches_oracle(tables):
-    got = tpch.run_query(tpch.q12(), _tpch_tables(tables), num_shards=1)
+    got = tpch.run_query(tpch.q12(), _tpch_tables(tables), CTX1)
     want = oracle.q12_oracle(tables["lineitem"], tables["orders"])
     np.testing.assert_allclose(got["high_line_count"], want["high_line_count"])
     np.testing.assert_allclose(got["low_line_count"], want["low_line_count"])
@@ -373,7 +376,7 @@ def test_q12_planned_matches_oracle(tables):
 
 
 def test_q18_planned_matches_oracle(tables):
-    got = tpch.run_query(tpch.q18(), _tpch_tables(tables), num_shards=1)
+    got = tpch.run_query(tpch.q18(), _tpch_tables(tables), CTX1)
     want = oracle.q18_oracle(tables["lineitem"], tables["orders"],
                              tables["customer"])
     assert len(want["o_orderkey"]) > 0  # HAVING threshold selects something
@@ -398,7 +401,7 @@ def test_q18_planned_matches_oracle(tables):
 def test_q1_distributed_single_device(tables):
     from repro.relational.distributed import q1_distributed
 
-    got = q1_distributed(tables["lineitem"], num_shards=1)
+    got = q1_distributed(tables["lineitem"], CTX1)
     want = oracle.q1_oracle(tables["lineitem"])
     for k in want:
         np.testing.assert_allclose(np.asarray(got[k]), want[k], rtol=1e-4)
@@ -407,6 +410,6 @@ def test_q1_distributed_single_device(tables):
 def test_q6_distributed_single_device(tables):
     from repro.relational.distributed import q6_distributed
 
-    got = float(q6_distributed(tables["lineitem"], num_shards=1))
+    got = float(q6_distributed(tables["lineitem"], CTX1))
     np.testing.assert_allclose(got, oracle.q6_oracle(tables["lineitem"]),
                                rtol=1e-4)

@@ -25,10 +25,13 @@ import numpy as np
 import pytest
 
 from repro.relational import datagen
+from repro.relational.context import ExecutionContext
 from repro.relational.planner import tpch
 from repro.relational.planner.physical import plan_physical
 from repro.relational.planner.plan_cache import PlanCache, plan_key
 from repro.serve import QueryRequest, QueryServeEngine, make_query_mix
+
+CTX1 = ExecutionContext(num_shards=1)
 
 SF = 0.004
 
@@ -62,7 +65,7 @@ def test_randomized_mix_no_leak_identical_results_no_starvation(tabs, seed):
     n_req, slots = 10, 2
     reqs = make_query_mix(templates, tenants, n_req, seed=seed,
                           max_arrival_round=3)
-    engine = QueryServeEngine(tables, num_shards=1, num_slots=slots,
+    engine = QueryServeEngine(tables, CTX1, num_slots=slots,
                               cache=PlanCache())
     done = engine.serve(reqs)
 
@@ -72,7 +75,7 @@ def test_randomized_mix_no_leak_identical_results_no_starvation(tabs, seed):
     assert len(done) == n_req
 
     # bit-identical to the solo run of the same template
-    solo = {pq.name: tpch.run_query(pq, tables, 1) for pq in templates}
+    solo = {pq.name: tpch.run_query(pq, tables, CTX1) for pq in templates}
     for r in done:
         assert _trees_equal(r.result, solo[r.query.name]), r.query.name
 
@@ -87,7 +90,7 @@ def test_flooding_tenant_cannot_starve_light_tenant(tabs):
     tables = _tables(tabs, [q6])
     flood = [QueryRequest("heavy", q6) for _ in range(8)]
     light = [QueryRequest("light", q6) for _ in range(2)]
-    engine = QueryServeEngine(tables, num_shards=1, num_slots=1,
+    engine = QueryServeEngine(tables, CTX1, num_slots=1,
                               cache=PlanCache())
     done = engine.serve(flood + light)
     engine.alloc.check()
@@ -105,7 +108,7 @@ def test_admission_respects_arrival_rounds(tabs):
     tables = _tables(tabs, [q1])
     early = QueryRequest("a", q1, arrival_round=0)
     late = QueryRequest("a", q1, arrival_round=5)
-    engine = QueryServeEngine(tables, num_shards=1, num_slots=2,
+    engine = QueryServeEngine(tables, CTX1, num_slots=2,
                               cache=PlanCache())
     engine.serve([late, early])
     assert early.admitted_round == 0
@@ -120,7 +123,7 @@ def test_admission_respects_arrival_rounds(tabs):
 def test_warm_path_all_nine_queries_zero_replans(tabs):
     templates = [make() for make in tpch.ALL_QUERIES.values()]
     tables = _tables(tabs, templates)
-    engine = QueryServeEngine(tables, num_shards=1, num_slots=3,
+    engine = QueryServeEngine(tables, CTX1, num_slots=3,
                               cache=PlanCache())
     cold = engine.serve([QueryRequest("t", pq) for pq in templates])
     assert all(not r.plan_cache_hit for r in cold)
@@ -136,7 +139,7 @@ def test_warm_path_all_nine_queries_zero_replans(tabs):
     # and cold == solo execute path for a spot-checked pair
     for name in ("q3", "q17"):
         pq = next(p for p in templates if p.name == name)
-        assert _trees_equal(by_name_cold[name], tpch.run_query(pq, tables, 1))
+        assert _trees_equal(by_name_cold[name], tpch.run_query(pq, tables, CTX1))
 
 
 _RESTART_SCRIPT = """

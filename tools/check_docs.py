@@ -25,6 +25,7 @@ DEFAULT_FILES = (
     os.path.join("docs", "ARCHITECTURE.md"),
     os.path.join("docs", "MULTIHOST.md"),
     os.path.join("docs", "SERVING.md"),
+    os.path.join("docs", "DATA.md"),
 )
 FENCE = re.compile(r"^```(\w*)\s*$")
 
