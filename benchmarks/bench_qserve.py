@@ -34,9 +34,12 @@ def _ctx1():
     return ExecutionContext(num_shards=1)
 
 
-def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
+def bench_qserve(
+    sf: float, requests: int, seed: int = 0, trace_dir: str | None = None
+) -> dict:
     import numpy as np
 
+    from repro.obs.trace import Tracer
     from repro.relational import datagen
     from repro.relational.planner import tpch
     from repro.relational.planner.plan_cache import PlanCache
@@ -73,12 +76,16 @@ def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
              "plan cache + executor memo")
 
     # -- multi-tenant mix: engine vs serial one-at-a-time ------------------
+    # Traced: every admission round and request lands in one tracer, and
+    # each request's QueryTrace carries its measured-vs-modeled exchange
+    # bytes — the serving-side model-error trajectory CI records.
+    tracer = Tracer()
     stream = make_query_mix(
         list(templates.values()), ("alice", "bob", "carol"), requests,
         seed=seed,
     )
     engine = QueryServeEngine(
-        tables, _CTX1, num_slots=4, cache=PlanCache(),
+        tables, _CTX1.with_(trace=tracer), num_slots=4, cache=PlanCache(),
         templates=list(templates.values()),
     )
     t0 = time.perf_counter()
@@ -96,6 +103,12 @@ def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
     assert qps_engine > qps_serial, (qps_engine, qps_serial)
     erec = engine.record()
     tt = np.asarray([r.ttfr_s for r in stream], dtype=np.float64)
+    byte_errs = [
+        e.byte_model_err
+        for qt in tracer.query_traces
+        for e in qt.edges
+        if e.byte_model_err is not None
+    ]
     rec["mix"] = dict(
         qps=qps_engine,
         serial_qps=qps_serial,
@@ -103,7 +116,19 @@ def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
         ttfr_p50_s=float(np.percentile(tt, 50)),
         ttfr_p99_s=float(np.percentile(tt, 99)),
         cache_hit_fraction=erec["cache"]["hit_fraction"],
+        traced_requests=len(tracer.query_traces),
+        worst_byte_model_err=max(byte_errs) if byte_errs else None,
     )
+    if byte_errs:
+        emit("qserve_worst_byte_model_err",
+             f"{rec['mix']['worst_byte_model_err']:.3f}", "x",
+             f"across {len(tracer.query_traces)} traced requests")
+    if trace_dir:
+        from repro.obs.export import write_trace_dir
+
+        rec["mix"]["trace_path"] = write_trace_dir(
+            tracer, trace_dir, basename="qserve_mix"
+        )
     emit("qserve_mix_qps", f"{qps_engine:.3f}", "q/s",
          f"{requests} reqs, 3 tenants, 4 slots")
     emit("qserve_mix_serial_qps", f"{qps_serial:.3f}", "q/s",
@@ -116,10 +141,10 @@ def bench_qserve(sf: float, requests: int, seed: int = 0) -> dict:
     return rec
 
 
-def run(smoke: bool = False) -> dict:
+def run(smoke: bool = False, trace_dir: str | None = None) -> dict:
     if smoke:
-        return bench_qserve(sf=0.004, requests=10)
-    return bench_qserve(sf=0.01, requests=24)
+        return bench_qserve(sf=0.004, requests=10, trace_dir=trace_dir)
+    return bench_qserve(sf=0.01, requests=24, trace_dir=trace_dir)
 
 
 if __name__ == "__main__":

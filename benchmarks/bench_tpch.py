@@ -11,6 +11,13 @@ planner's modeled exchange profile instead: shuffle/broadcast edge counts
 and wire bytes per query at 8 shards (the paper's "data shuffled" row),
 straight from the physical plan that the golden snapshots pin down.
 
+The modeled numbers are checked against measurement: the bench shells out
+to ``repro.obs.model_check`` (a traced run on an 8-fake-device mesh — the
+XLA device-count flag must precede jax init, hence a subprocess) and
+records each edge's ``byte_model_err`` — measured wire bytes from the
+in-jit destination histograms vs the planner's estimate-priced model.
+``--compare`` gates those leaves lower-is-better at the usual 2x.
+
 ``run(smoke=True)`` returns the record the CI ``bench-smoke`` job writes to
 ``BENCH_tpch.json`` — the per-PR perf trajectory for the relational engine.
 """
@@ -24,6 +31,36 @@ from .common import emit, time_jit
 
 SF = 0.02
 PLAN_SHARDS = 8  # the exchange-profile mesh (modeled, no devices needed)
+
+# model-vs-measured subprocess runs: (query, streamed) — q17 streamed is
+# the hardest case (selective semi-join upstream, two passes over the
+# shared shuffle); q3 exercises the resident-side traversal accounting.
+MODEL_CHECKS = (("q17", True), ("q3", True))
+SMOKE_MODEL_CHECKS = (("q17", True),)
+
+
+def _model_check(query: str, streamed: bool, trace_dir: str | None) -> dict:
+    """One traced query under ``repro.obs.model_check`` on fake devices."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    cmd = [sys.executable, "-m", "repro.obs.model_check",
+           "--query", query, "--shards", str(PLAN_SHARDS)]
+    if streamed:
+        cmd.append("--streamed")
+    if trace_dir:
+        cmd += ["--trace-dir", trace_dir]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={PLAN_SHARDS}"
+    out = subprocess.run(cmd, capture_output=True, text=True, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"model_check {query} exited {out.returncode}:\n"
+            f"{out.stderr[-2000:]}"
+        )
+    return json.loads(out.stdout)
 
 
 def _handwritten_runners(tabs):
@@ -104,7 +141,7 @@ def _correct(name, got, tabs) -> bool:
     raise KeyError(name)
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, trace_dir: str | None = None):
     sf = 0.01 if smoke else SF
     iters = 3 if smoke else 5
     tabs = datagen.gen_all(sf)
@@ -153,6 +190,21 @@ def run(smoke: bool = False):
             "wire_bytes": int(wire),
             "exchanges": summary,
         }
+
+    record["model_check"] = {}
+    for qname, streamed in (SMOKE_MODEL_CHECKS if smoke else MODEL_CHECKS):
+        rep = _model_check(qname, streamed, trace_dir)
+        worst = rep.get("worst_byte_model_err")
+        record["model_check"][qname] = {
+            "worst_byte_model_err": worst,
+            "edges": {
+                k: e["byte_model_err"] for k, e in rep["edges"].items()
+            },
+        }
+        emit(f"tpch/{qname}_byte_model_err",
+             f"{worst:.3f}" if worst is not None else "n/a", "x",
+             f"measured vs modeled wire bytes @ {PLAN_SHARDS} fake devices"
+             + (" (streamed)" if streamed else ""))
     return record
 
 

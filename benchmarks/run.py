@@ -81,19 +81,21 @@ def roofline():
         print("roofline: no artifacts found (run repro.launch.dryrun first)")
 
 
-def smoke(json_dir: str) -> None:
+def smoke(json_dir: str, trace_dir: str | None = None) -> None:
     """The CI bench lane: serve + exchange + tpch records -> BENCH_*.json."""
     os.makedirs(json_dir, exist_ok=True)
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
     print("# --- serve (smoke) ---")
     serve_rec = bench_serve.run(smoke=True)
     print("# --- fig12 (smoke) ---")
     exchange_rec = bench_exchange.run(smoke=True)
     print("# --- tpch (smoke) ---")
-    tpch_rec = bench_tpch.run(smoke=True)
+    tpch_rec = bench_tpch.run(smoke=True, trace_dir=trace_dir)
     print("# --- skew (smoke) ---")
     skew_rec = bench_skew.run(smoke=True)
     print("# --- qserve (smoke) ---")
-    qserve_rec = bench_qserve.run(smoke=True)
+    qserve_rec = bench_qserve.run(smoke=True, trace_dir=trace_dir)
     print("# --- oocore (smoke) ---")
     oocore_rec = bench_oocore.run(smoke=True)
     for name, rec in (("BENCH_serve.json", serve_rec),
@@ -112,7 +114,12 @@ def smoke(json_dir: str) -> None:
 # of each dotted path; higher-is-better wins ties (tok_s ends in "_s" but
 # is a throughput).  Unmatched keys (counts, knobs, flags) are not gated.
 _HIGHER_IS_BETTER = ("tok_s", "_ratio", "_fraction")
-_LOWER_IS_BETTER = ("_s", "_ms", "_us", "_bytes", "slot_steps", "_steps")
+# _model_err: measured-vs-modeled exchange-byte ratio (>= 1, 1 = perfect
+# model) — a growing ratio means the planner's estimates are drifting from
+# what the devices ship, so it gates lower-is-better like a latency.
+_LOWER_IS_BETTER = (
+    "_s", "_ms", "_us", "_bytes", "slot_steps", "_steps", "_model_err"
+)
 
 
 def _direction(path: str) -> str | None:
@@ -198,6 +205,9 @@ def main():
     p.add_argument("--smoke", action="store_true",
                    help="reduced CI lane; writes BENCH_*.json to --json-dir")
     p.add_argument("--json-dir", default=os.path.join("artifacts", "bench"))
+    p.add_argument("--trace-dir", default=None,
+                   help="also write Perfetto/JSON traces of the traced "
+                        "smoke benches here (uploaded as CI artifacts)")
     p.add_argument("--compare", default=None, metavar="BASELINE",
                    help="BENCH_*.json file or directory to gate --json-dir "
                         "against; exits nonzero on any regression")
@@ -206,7 +216,7 @@ def main():
     args = p.parse_args()
     print("name,value,unit,note")
     if args.smoke:
-        smoke(args.json_dir)
+        smoke(args.json_dir, trace_dir=args.trace_dir)
     if args.compare is not None:
         n = compare(args.compare, args.json_dir, args.compare_threshold)
         sys.exit(1 if n else 0)

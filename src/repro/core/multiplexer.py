@@ -86,6 +86,21 @@ class CommMultiplexer:
     # the probe side).  Set by the autotuner; ignored on single-pod meshes.
     cross_pod: str = "broadcast"
 
+    def describe(self) -> dict:
+        """JSON-able knob summary — what actually carries the traffic.
+        Trace exports attach this so a Perfetto timeline (or a bench
+        record) names the transport/pack schedule its exchanges rode."""
+        return dict(
+            impl=str(self.impl),
+            pack_impl=str(self.pack_impl),
+            pipeline_chunks=int(self.pipeline_chunks),
+            transport_chunks=int(self.transport_chunks),
+            cross_pod=str(self.cross_pod),
+            small_axes=list(self.plan.small_axes),
+            large_axes=list(self.plan.large_axes),
+            num_pods=int(self.plan.num_pods),
+        )
+
     # -- exchange-operator entry points (must be inside shard_map) ---------
 
     def all_to_all(self, x: jax.Array, axis_name: str) -> jax.Array:

@@ -17,6 +17,7 @@ import argparse
 import json
 import time
 
+from repro.obs.trace import Tracer
 from repro.relational import datagen
 from repro.relational.context import ExecutionContext, StatsMode
 from repro.relational.planner import tpch
@@ -44,6 +45,8 @@ def main():
                    help="persist plan artifacts here (cross-process cache)")
     p.add_argument("--stats", action="store_true",
                    help="profile tables so plans are skew-aware")
+    p.add_argument("--trace-dir", default=None,
+                   help="write a Perfetto-loadable trace JSON per process")
     args = p.parse_args()
 
     tabs = datagen.gen_all(args.sf)
@@ -51,6 +54,7 @@ def main():
     names = sorted({t for pq in templates for t in pq.tables})
     tables = {name: tabs[name] for name in names}
 
+    tracer = Tracer() if args.trace_dir else None
     calls_before = plan_physical.calls
     engine = QueryServeEngine(
         tables,
@@ -58,6 +62,7 @@ def main():
             num_shards=args.num_shards,
             num_pods=args.num_pods,
             stats_mode=StatsMode.COLLECT if args.stats else StatsMode.STATIC,
+            trace=tracer,
         ),
         num_slots=args.slots,
         cache=PlanCache(cache_dir=args.cache_dir),
@@ -77,6 +82,12 @@ def main():
     rec = engine.record()
     rec["qps"] = args.requests / elapsed
     rec["plan_physical_calls"] = plan_physical.calls - calls_before
+    if tracer is not None:
+        from repro.obs.export import write_trace_dir
+
+        rec["trace_path"] = write_trace_dir(
+            tracer, args.trace_dir, basename="qserve"
+        )
     print(json.dumps(rec, indent=2, sort_keys=True))
 
 

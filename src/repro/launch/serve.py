@@ -83,6 +83,10 @@ def main(argv=None):
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--trace-dir", default=None,
+                   help="write a Perfetto-loadable trace JSON per process "
+                        "(admission/prefill/decode-step spans; continuous "
+                        "mode)")
     args = p.parse_args(argv)
 
     cfg = (get_smoke_config if args.smoke else get_config)(args.arch)
@@ -103,11 +107,22 @@ def main(argv=None):
         clone = [Request(prompt=r.prompt.copy(), max_new_tokens=r.max_new_tokens,
                          eos_id=r.eos_id) for r in reqs]
 
+        tracer = None
+        if args.trace_dir:
+            from repro.obs.trace import Tracer
+
+            tracer = Tracer()
         cont = ContinuousEngine(api, batch_size=args.batch, capacity=capacity,
-                                temperature=args.temperature, seed=args.seed)
+                                temperature=args.temperature, seed=args.seed,
+                                tracer=tracer)
         t0 = time.perf_counter()
         cont.serve(params, reqs, extra_inputs=extra)
         _summarize("continuous", reqs, cont.stats, time.perf_counter() - t0)
+        if tracer is not None:
+            from repro.obs.export import write_trace_dir
+
+            print("trace:", write_trace_dir(tracer, args.trace_dir,
+                                            basename="serve"))
 
         static = ServeEngine(api, batch_size=args.batch, capacity=capacity,
                              temperature=args.temperature, seed=args.seed)

@@ -5,31 +5,30 @@ Historically every entry point (``run_query``, ``explain_query``,
 hand-threaded the same tuple of knobs — ``(num_shards, num_pods, impl,
 pack_impl, num_chunks, cross_pod, cfg, stats)`` — through its signature.
 ``ExecutionContext`` replaces that sprawl: mesh shape, multiplexer knobs,
-planner config, stats mode, and the out-of-core morsel/spill knobs live in
-one frozen, hashable dataclass that every entry point accepts.
+planner config, stats mode, the out-of-core morsel/spill knobs, and the
+observability hook live in one frozen, hashable dataclass that every entry
+point accepts.
 
-The old kwarg spellings keep working for one release through a single
-``DeprecationWarning`` shim (:func:`resolve_context`); in-repo code is fully
-migrated and the test suite runs with ``error::DeprecationWarning`` so only
-the shim itself may emit.
+The PR-9 deprecated per-knob kwarg shim (``resolve_context`` /
+``reset_deprecation_warning``) is gone after its one-release grace: the
+old spellings now raise ``TypeError`` at the entry points instead of
+warning.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-import warnings
 from typing import TYPE_CHECKING, Any, Mapping
 
 if TYPE_CHECKING:  # annotation-only: keeps this module import-cycle-free
+    from repro.obs.trace import Tracer
     from repro.relational.planner.physical import PlannerConfig
 
 __all__ = [
     "StatsMode",
     "ExecutionContext",
-    "resolve_context",
-    "reset_deprecation_warning",
-    "LEGACY_KWARGS",
+    "require_context",
 ]
 
 
@@ -52,10 +51,12 @@ class StatsMode(enum.Enum):
 class ExecutionContext:
     """Frozen bundle of everything that parameterizes query execution.
 
-    Hashable (usable as a cache key); ``stats_profile`` is excluded from
-    equality/hash because profile dicts are unhashable payload, not
-    configuration — two contexts in PROFILE mode compare equal iff their
-    other knobs match.
+    Hashable (usable as a cache key); ``stats_profile`` and ``trace`` are
+    excluded from equality/hash — profile dicts and tracers are payload,
+    not configuration.  In particular a traced and an untraced context
+    compare (and hash) EQUAL, so attaching a tracer can never invalidate a
+    plan-cache entry or an executor memo: tracing changes what gets
+    written down, never what runs.
     """
 
     # --- mesh shape -------------------------------------------------------
@@ -93,6 +94,15 @@ class ExecutionContext:
     group_state_rows: int | None = None
     #: Depth of the host→device prefetch queue for morsel streaming.
     prefetch_depth: int = 2
+    # --- observability ----------------------------------------------------
+    #: A :class:`repro.obs.trace.Tracer` to record spans, counters and
+    #: per-run :class:`~repro.obs.trace.QueryTrace`\ s into.  Excluded from
+    #: equality/hash (see class docstring): traced and untraced contexts
+    #: share plan-cache entries and memoized executors, and device-side
+    #: counters are always on — None just means nobody writes them down.
+    trace: "Tracer | None" = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     def __post_init__(self) -> None:
         if self.num_shards < 1 or self.num_pods < 1:
@@ -104,8 +114,8 @@ class ExecutionContext:
         if not isinstance(self.stats_mode, StatsMode):
             raise TypeError(
                 f"stats_mode must be a StatsMode, got {self.stats_mode!r}; "
-                'the stats="collect" magic string is only accepted through the '
-                "deprecated-kwarg shim"
+                'the old stats="collect" magic string was removed with the '
+                "per-knob kwargs"
             )
         if self.stats_mode is StatsMode.PROFILE and self.stats_profile is None:
             raise ValueError("StatsMode.PROFILE requires stats_profile")
@@ -135,95 +145,15 @@ class ExecutionContext:
         return dataclasses.replace(self, **changes)
 
 
-# Legacy kwarg names accepted (for one release) by every migrated entry
-# point.  ``stats`` carries the old str-or-dict pun and is unpunned below.
-LEGACY_KWARGS = (
-    "num_shards",
-    "num_pods",
-    "impl",
-    "pack_impl",
-    "num_chunks",
-    "cross_pod",
-    "cfg",
-    "stats",
-)
-
-_warned = False
-
-
-def reset_deprecation_warning() -> None:
-    """Re-arm the warn-once latch (test helper)."""
-    global _warned
-    _warned = False
-
-
-def _warn_once(where: str) -> None:
-    global _warned
-    if _warned:
-        return
-    _warned = True
-    warnings.warn(
-        f"{where}: passing num_shards/impl/pack_impl/num_chunks/num_pods/"
-        "cross_pod/cfg/stats individually is deprecated; pass an "
-        "ExecutionContext instead (repro.relational.context). The old "
-        "kwargs will be removed next release.",
-        DeprecationWarning,
-        stacklevel=4,
-    )
-
-
-def _from_legacy(where: str, legacy: dict) -> ExecutionContext:
-    unknown = set(legacy) - set(LEGACY_KWARGS)
-    if unknown:
-        raise TypeError(f"{where}: unexpected keyword arguments {sorted(unknown)}")
-    _warn_once(where)
-    stats = legacy.pop("stats", None)
-    if stats == "collect":
-        legacy["stats_mode"] = StatsMode.COLLECT
-    elif isinstance(stats, Mapping):
-        legacy["stats_mode"] = StatsMode.PROFILE
-        legacy["stats_profile"] = stats
-    elif stats is not None:
-        raise TypeError(f"{where}: stats must be None, 'collect', or a profile dict")
-    if legacy.get("impl") is None:
-        legacy.pop("impl", None)
-    return ExecutionContext(**legacy)
-
-
-def resolve_context(
-    ctx: "ExecutionContext | int | None",
-    legacy: dict | None = None,
-    *,
-    where: str,
-    default: "ExecutionContext | None" = None,
-) -> ExecutionContext:
-    """Accept the new ExecutionContext or the deprecated kwarg spelling.
-
-    ``ctx`` is either an :class:`ExecutionContext` (the supported API), a
-    bare int (the old positional ``num_shards``), or ``None``; ``legacy``
-    holds whatever old-style keyword arguments the caller captured via
-    ``**legacy``.  Any non-ExecutionContext spelling emits one
-    ``DeprecationWarning`` per process (re-arm with
-    :func:`reset_deprecation_warning`).
-    """
-    legacy = dict(legacy or {})
+def require_context(ctx: Any, *, where: str) -> ExecutionContext:
+    """Entry-point guard now that the kwarg shim is gone: anything that is
+    not an :class:`ExecutionContext` gets a pointed TypeError naming the
+    migration, instead of a confusing attribute error downstream."""
     if isinstance(ctx, ExecutionContext):
-        if legacy:
-            raise TypeError(
-                f"{where}: legacy kwargs {sorted(legacy)} cannot be combined "
-                "with an ExecutionContext; set them on the context"
-            )
         return ctx
-    if isinstance(ctx, bool):
-        raise TypeError(f"{where}: expected ExecutionContext or int, got {ctx!r}")
-    if isinstance(ctx, int):
-        if "num_shards" in legacy:
-            raise TypeError(f"{where}: num_shards given positionally and by keyword")
-        legacy["num_shards"] = ctx
-    elif ctx is not None:
-        raise TypeError(f"{where}: expected ExecutionContext or int, got {type(ctx)!r}")
-    if not legacy:
-        if default is not None:
-            return default
-        raise TypeError(f"{where}: missing ExecutionContext (or legacy num_shards)")
-    return _from_legacy(where, legacy)
+    raise TypeError(
+        f"{where}: expected an ExecutionContext, got {type(ctx).__name__!r}. "
+        "The deprecated per-knob kwargs (num_shards/impl/pack_impl/"
+        "num_chunks/num_pods/cross_pod/cfg/stats) were removed; build an "
+        "ExecutionContext (repro.relational.context) instead."
+    )

@@ -14,11 +14,11 @@ IR, and the planner's decisions are inspectable via
 Execution is parameterized by ONE object: pass an
 :class:`~repro.relational.context.ExecutionContext` (mesh shape,
 multiplexer knobs, planner config, stats mode, out-of-core morsel/spill
-knobs) as ``ctx``.  The old spellings — ``num_shards`` positionally plus
-``impl=``/``pack_impl=``/``num_chunks=``/``num_pods=``/``cross_pod=``
-keywords — still resolve for one release through the deprecation shim in
-``run_query``.  Inputs may be in-memory ``Table``\\ s or chunked
-``DataSource``\\ s (the latter stream morsel-by-morsel, out of core).
+knobs, observability tracer) as ``ctx``.  The PR-9 per-knob kwarg shim
+(``num_shards`` positionally plus ``impl=``/``pack_impl=``/... keywords)
+is gone: old spellings raise ``TypeError``.  Inputs may be in-memory
+``Table``\\ s or chunked ``DataSource``\\ s (the latter stream
+morsel-by-morsel, out of core).
 
 The execution contract is unchanged from the hand-written era and the
 equivalence suites still hold these entry points to it:
@@ -40,80 +40,66 @@ from .planner import tpch
 from .planner.tpch import run_query as _run
 
 
-def q1_distributed(lineitem, ctx=None, delta_days: int = 90, **legacy):
-    return _run(tpch.q1(delta_days), {"lineitem": lineitem}, ctx, **legacy)
+def q1_distributed(lineitem, ctx=None, delta_days: int = 90):
+    return _run(tpch.q1(delta_days), {"lineitem": lineitem}, ctx)
 
 
-def q6_distributed(lineitem, ctx=None, year: int = 1994, **legacy):
-    return _run(tpch.q6(year), {"lineitem": lineitem}, ctx, **legacy)
+def q6_distributed(lineitem, ctx=None, year: int = 1994):
+    return _run(tpch.q6(year), {"lineitem": lineitem}, ctx)
 
 
-def q17_distributed(
-    lineitem, part, ctx=None, brand: int = 12, container: int = 2, **legacy
-):
+def q17_distributed(lineitem, part, ctx=None, brand: int = 12,
+                    container: int = 2):
     return _run(
-        tpch.q17(brand, container),
-        {"lineitem": lineitem, "part": part}, ctx, **legacy,
+        tpch.q17(brand, container), {"lineitem": lineitem, "part": part}, ctx
     )
 
 
-def q3_distributed(
-    customer, orders, lineitem, ctx=None, segment: int = 1, **legacy
-):
+def q3_distributed(customer, orders, lineitem, ctx=None, segment: int = 1):
     return _run(
         tpch.q3(segment),
         {"customer": customer, "orders": orders, "lineitem": lineitem},
-        ctx, **legacy,
+        ctx,
     )
 
 
 def q14_distributed(
-    lineitem, part, ctx=None, impl=None, year: int = 1995, month: int = 9,
-    promo_brands: int = 5, **legacy,
+    lineitem, part, ctx=None, year: int = 1995, month: int = 9,
+    promo_brands: int = 5,
 ):
-    if impl is not None:  # old 4th positional arg
-        legacy["impl"] = impl
     return _run(
         tpch.q14(year, month, promo_brands),
-        {"lineitem": lineitem, "part": part}, ctx, **legacy,
+        {"lineitem": lineitem, "part": part}, ctx,
     )
 
 
-def q19_distributed(lineitem, part, ctx=None, impl=None, terms=None, **legacy):
-    if impl is not None:  # old 4th positional arg
-        legacy["impl"] = impl
-    return _run(
-        tpch.q19(terms), {"lineitem": lineitem, "part": part}, ctx, **legacy
-    )
+def q19_distributed(lineitem, part, ctx=None, terms=None):
+    return _run(tpch.q19(terms), {"lineitem": lineitem, "part": part}, ctx)
 
 
-def q4_distributed(
-    lineitem, orders, ctx=None, year: int = 1993, month: int = 7, **legacy
-):
+def q4_distributed(lineitem, orders, ctx=None, year: int = 1993,
+                   month: int = 7):
     return _run(
-        tpch.q4(year, month), {"lineitem": lineitem, "orders": orders},
-        ctx, **legacy,
+        tpch.q4(year, month), {"lineitem": lineitem, "orders": orders}, ctx
     )
 
 
 def q12_distributed(
     lineitem, orders, ctx=None, year: int = 1994,
-    modes: tuple[int, int] = (5, 3), **legacy,
+    modes: tuple[int, int] = (5, 3),
 ):
     return _run(
-        tpch.q12(year, modes), {"lineitem": lineitem, "orders": orders},
-        ctx, **legacy,
+        tpch.q12(year, modes), {"lineitem": lineitem, "orders": orders}, ctx
     )
 
 
 def q18_distributed(
     lineitem, orders, customer, ctx=None, threshold: int = 300, k: int = 100,
-    **legacy,
 ):
     return _run(
         tpch.q18(threshold, k),
         {"lineitem": lineitem, "orders": orders, "customer": customer},
-        ctx, **legacy,
+        ctx,
     )
 
 

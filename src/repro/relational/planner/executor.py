@@ -25,6 +25,8 @@ this module touches devices.
 from __future__ import annotations
 
 import math
+import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +36,7 @@ from jax.sharding import PartitionSpec as P
 from ...compat import fetch, make_mesh, shard_map
 from ...core import exchange as core_exchange
 from ...core.multiplexer import CommMultiplexer, make_multiplexer
+from ...obs.trace import QueryTrace
 from .. import operators as ops
 from ..table import Table, pad_to, shard_rows
 from .physical import PhysicalPlan, PNode
@@ -285,26 +288,20 @@ def _check_vma(plan: PhysicalPlan, mux: CommMultiplexer) -> bool:
     )
 
 
-def _resolve_exec_ctx(plan: PhysicalPlan, ctx, legacy: dict, where: str):
-    """Accept ExecutionContext / legacy kwargs / nothing for this plan.
+def _resolve_exec_ctx(plan: PhysicalPlan, ctx, where: str):
+    """Resolve the context for this plan.
 
-    The bare two-argument call (``compile_plan(plan, tables)``) is still
+    The bare two-argument call (``compile_plan(plan, tables)``) is
     first-class API — it resolves to the plan's own mesh shape with default
-    knobs and emits no deprecation warning.  Anything spelled through the
-    old per-knob kwargs warns once (see :mod:`repro.relational.context`).
+    knobs.  Anything else must be an :class:`ExecutionContext` whose mesh
+    shape matches the plan's (the PR-9 per-knob kwarg shim is gone; old
+    spellings raise ``TypeError``).
     """
-    from ..context import ExecutionContext, resolve_context
+    from ..context import ExecutionContext, require_context
 
-    if isinstance(ctx, str):  # the old positional ``impl``
-        legacy = {"impl": ctx, **legacy}
-        ctx = None
-    if not isinstance(ctx, ExecutionContext) and legacy:
-        legacy.setdefault("num_shards", plan.num_shards)
-        legacy.setdefault("num_pods", plan.num_pods)
-    ctx = resolve_context(
-        ctx, legacy, where=where,
-        default=ExecutionContext(plan.num_shards, num_pods=plan.num_pods),
-    )
+    if ctx is None:
+        ctx = ExecutionContext(plan.num_shards, num_pods=plan.num_pods)
+    ctx = require_context(ctx, where=where)
     if (ctx.num_shards, ctx.num_pods) != (plan.num_shards, plan.num_pods):
         raise ValueError(
             f"{where}: context mesh {ctx.num_shards}x{ctx.num_pods} does not "
@@ -347,7 +344,7 @@ def _check_row_budget(plan: PhysicalPlan, tables: dict[str, Table], ctx) -> None
             )
 
 
-def execute_plan(plan: PhysicalPlan, tables: dict, ctx=None, **legacy):
+def execute_plan(plan: PhysicalPlan, tables: dict, ctx=None):
     """Run a physical plan over real data; returns the fetched result dict.
 
     ``tables`` maps base-table names to :class:`Table`\\ s (or
@@ -356,11 +353,10 @@ def execute_plan(plan: PhysicalPlan, tables: dict, ctx=None, **legacy):
     morsel-streamed out-of-core execution
     (:func:`~repro.relational.planner.stream.compile_plan_streamed`);
     everything resident runs the one-shard_map in-memory path.  ``ctx`` is
-    an :class:`~repro.relational.context.ExecutionContext`; the old
-    ``impl=``/``pack_impl=``/``num_chunks=`` kwargs still work for one
-    release via the deprecation shim.
+    an :class:`~repro.relational.context.ExecutionContext` (or None for the
+    plan's own mesh with default knobs).
     """
-    ctx = _resolve_exec_ctx(plan, ctx, legacy, where="execute_plan")
+    ctx = _resolve_exec_ctx(plan, ctx, where="execute_plan")
     from ..source import DataSource
 
     if any(
@@ -377,16 +373,13 @@ def compile_plan(
     tables: dict,
     ctx=None,
     mux: CommMultiplexer | None = None,
-    **legacy,
 ):
     """Build a zero-arg runner for the plan (jit object created once, so
     repeated calls hit the compile cache — what the benchmarks time).
 
     ``ctx`` is an :class:`~repro.relational.context.ExecutionContext`
     carrying the multiplexer knobs (its mesh shape must match the plan's);
-    omitted, the plan's own mesh with default knobs applies.  The old
-    ``impl=``/``pack_impl=``/``num_chunks=`` kwargs resolve through the
-    one-release deprecation shim.
+    omitted, the plan's own mesh with default knobs applies.
 
     ``mux`` injects a SHARED multiplexer instead of building the per-query
     one: the query-serving engine tunes one knob set over every concurrent
@@ -395,13 +388,17 @@ def compile_plan(
     tuned schedules.  The mux must have been built for this plan's mesh
     shape; its knobs override the plan-time tuner's.
 
-    Beyond calling the runner directly, ``run.dispatch()`` /
-    ``run.finalize(out)`` split the call into an async dispatch (no host
-    sync) and the fetch+checks — the serving engine dispatches a whole
-    admission round before finalizing any of it, so concurrent queries
-    overlap on the XLA async runtime.
+    The returned :class:`CompiledRunner` is callable (run to completion) or
+    split-phase: ``run.dispatch()`` launches without a host sync and
+    ``run.finalize(out)`` / ``run.collect(out)`` fetch+check — the serving
+    engine dispatches a whole admission round before finalizing any of it,
+    so concurrent queries overlap on the XLA async runtime.  ``collect``
+    additionally returns the run's :class:`~repro.obs.trace.QueryTrace`
+    (per-edge measured bytes, destination histograms, salting decisions,
+    model predictions) without mutating the runner — the runner is shared
+    across concurrent callers, so per-run telemetry never lives on it.
     """
-    ctx = _resolve_exec_ctx(plan, ctx, legacy, where="compile_plan")
+    ctx = _resolve_exec_ctx(plan, ctx, where="compile_plan")
     impl, pack_impl, num_chunks = ctx.impl, ctx.pack_impl, ctx.num_chunks
     num_shards, num_pods = plan.num_shards, plan.num_pods
     tables = {name: _resident_table(name, tables[name]) for name in plan.scans}
@@ -417,6 +414,12 @@ def compile_plan(
     axes = _axes(num_pods)
     if mux is None:
         mux = _make_mux(mesh, plan, impl, pack_impl, num_chunks)
+    if ctx.trace is not None:
+        # compile-time metadata only (the runner itself stays tracer-free:
+        # it may be memoized and shared with untraced contexts)
+        ctx.trace.add_span(
+            f"mux:{plan.name}", cat="compile", **mux.describe()
+        )
     prepped = [_prep(tables[name], num_shards) for name in plan.scans]
     single = num_shards == 1 and num_pods == 1
     report_keys = _report_keys(plan.root)
@@ -560,32 +563,96 @@ def compile_plan(
         check_vma=_check_vma(plan, mux),
     )
     jfn = jax.jit(fn)
+    from ...obs import model_check as _mc
 
-    def dispatch():
+    models = _mc.edge_models(plan)
+    return CompiledRunner(plan, jfn, flat, models)
+
+
+class RunnerBase:
+    """Shared surface of the in-memory and streamed runners.
+
+    Per-run telemetry travels through :meth:`collect`'s return value, not
+    the runner: compiled runners are memoized and shared across concurrent
+    callers, so a mutable report attribute is a data race (two overlapped
+    ``finalize`` calls clobber each other's reports).  The deprecated
+    ``exchange_report`` property remains as a warned view of the LAST
+    finalized run for single-caller code; concurrent callers must use
+    ``collect``.
+    """
+
+    _last_trace: QueryTrace | None = None
+
+    @property
+    def last_trace(self) -> QueryTrace | None:
+        """The :class:`QueryTrace` of the most recent finalized run (None
+        before the first)."""
+        return self._last_trace
+
+    @property
+    def exchange_report(self) -> dict:
+        """Deprecated last-run report view; racy under concurrency."""
+        warnings.warn(
+            "run.exchange_report is deprecated: it reflects only the LAST "
+            "finalized run, which races under concurrent serving. Use "
+            "result, trace = run.collect(run.dispatch()) and "
+            "trace.exchange_report() (or trace.edges) instead.",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        qt = self._last_trace
+        return qt.exchange_report() if qt is not None else {}
+
+
+class CompiledRunner(RunnerBase):
+    """Zero-arg in-memory runner with split-phase dispatch/collect."""
+
+    def __init__(self, plan: PhysicalPlan, jfn, flat, models: dict):
+        self._plan = plan
+        self._jfn = jfn
+        self._flat = flat
+        self._models = models
+
+    def dispatch(self):
         """Launch the jitted program without waiting on the host — results
         are live device values (XLA async dispatch)."""
-        return jfn(*flat)
+        return self._jfn(*self._flat)
 
-    def finalize(out):
-        """Fetch + check a ``dispatch()`` result: drop-count enforcement,
-        exchange report publication, host transfer of the result."""
+    def collect(self, out, t_dispatch: float | None = None):
+        """Fetch + check a ``dispatch()`` result; returns ``(result,
+        QueryTrace)`` without touching runner state (safe under
+        concurrency).  ``t_dispatch`` (a ``time.perf_counter()`` reading
+        taken just before ``dispatch``) prices the trace's measured wall.
+        """
+        from ...obs.model_check import build_query_trace
+
         result, dropped, reports = out
-        _raise_on_dropped(plan.name, dropped)
-        run.exchange_report = fetch(reports)
-        return fetch(result)
+        _raise_on_dropped(self._plan.name, dropped)
+        fetched = fetch(result)
+        measured = (
+            time.perf_counter() - t_dispatch if t_dispatch is not None else None
+        )
+        qt = build_query_trace(
+            self._plan, fetch(reports), self._models, measured_s=measured
+        )
+        return fetched, qt
 
-    def run():
-        return finalize(dispatch())
+    def finalize(self, out, t_dispatch: float | None = None):
+        """``collect`` plus last-trace bookkeeping; returns the result."""
+        result, qt = self.collect(out, t_dispatch)
+        self._last_trace = qt
+        return result
 
-    run.dispatch = dispatch
-    run.finalize = finalize
-    run.exchange_report = {}
-    return run
+    def __call__(self):
+        t0 = time.perf_counter()
+        return self.finalize(self.dispatch(), t_dispatch=t0)
 
 
 __all__ = [
     "execute_plan",
     "compile_plan",
+    "RunnerBase",
+    "CompiledRunner",
     "_exchange_by_key",
     "_broadcast_table",
     "_raise_on_dropped",

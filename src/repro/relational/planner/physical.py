@@ -435,6 +435,10 @@ def _plan_once(
             float_cols=child.float_cols,
         )
         est[id(node)] = _est(child)
+        # expose the estimate for the model-vs-measured check: modeled wire
+        # bytes price the rows the estimator expects to FLOW, while the
+        # capacity-based ``stats`` above keep sizing every buffer
+        info["est_rows"] = est[id(node)]
         exch_memo[mkey] = node
         return node
 
@@ -564,7 +568,23 @@ def _plan_once(
                     c for c in node.payload if c in b.float_cols
                 ),
             )
-            est[id(p)] = _est(pr)
+            # Containment estimate: under referential integrity every probe
+            # key is drawn from the build's key domain, so the probe rows
+            # surviving the join are the fraction of build keys surviving
+            # upstream filters — est(b) / ndv(build_key).  The build-key ndv
+            # comes from the base-table profile (exact when the sample
+            # covers the dimension table); the probe-key ndv is only a
+            # fallback — its GEE estimate carries a sqrt(N/n) error that
+            # would leak straight into the output cardinality.  Without
+            # profiles, keep the pass-through estimate.
+            est_out = _est(pr)
+            if profiles:
+                cs = stats_by_col.get(node.build_key) or stats_by_col.get(
+                    node.probe_key
+                )
+                if cs is not None and cs.ndv > 0:
+                    est_out = _est(pr) * min(1.0, _est(b) / float(cs.ndv))
+            est[id(p)] = est_out
         elif isinstance(node, L.GroupBy) and node.num_groups is None:
             c = reject_replicated(plan(node.child), "sort-based GroupBy")
             c = ensure_hash(c, node.key)

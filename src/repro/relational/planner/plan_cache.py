@@ -225,17 +225,27 @@ class PlanCache:
 
     ``cache_dir=None`` (and no ``REPRO_PLAN_CACHE_DIR`` in the env) keeps
     the cache in-process only; with a directory, plans persist across
-    processes.  Counters (`hits`/`misses`/`disk_hits`/`executor_hits`/
-    `executor_misses`) feed the serving engine's records and the bench's
-    cache-hit-rate line.
+    processes.  ``max_entries`` (or ``REPRO_PLAN_CACHE_MAX``; 0 =
+    unlimited) caps the on-disk entry count with LRU eviction, so a
+    long-lived cache dir shared by many templates cannot grow without
+    bound.  Counters (`hits`/`misses`/`disk_hits`/`evictions`/
+    `executor_hits`/`executor_misses`) feed the serving engine's records
+    and the bench's cache-hit-rate line.
     """
 
-    def __init__(self, cache_dir: str | None = None):
+    def __init__(self, cache_dir: str | None = None,
+                 max_entries: int | None = None):
         self.cache_dir = (
             cache_dir
             if cache_dir is not None
             else os.environ.get("REPRO_PLAN_CACHE_DIR")
         )
+        if max_entries is None:
+            max_entries = int(os.environ.get("REPRO_PLAN_CACHE_MAX", "0"))
+        #: On-disk entry cap (0 = unlimited).  Enforced after every insert
+        #: by mtime — effectively LRU, because lookup() touches the file.
+        self.max_entries = max_entries
+        self.evictions = 0
         self._plans: dict[str, PhysicalPlan] = {}
         self._runners: dict[tuple, Callable] = {}
         self.hits = 0
@@ -272,6 +282,10 @@ class PlanCache:
         except (OSError, pickle.PickleError, EOFError, KeyError,
                 AttributeError, ImportError):
             return None
+        try:
+            os.utime(path)  # LRU touch: recency, not insertion order
+        except OSError:
+            pass
         self._plans[key.digest] = plan
         self.disk_hits += 1
         return plan
@@ -300,6 +314,47 @@ class PlanCache:
                 os.unlink(tmp)
             except OSError:
                 pass
+        self._enforce_cap(keep=os.path.basename(path))
+
+    def _enforce_cap(self, keep: str | None = None) -> None:
+        """Bound the on-disk cache at ``max_entries`` plan files, evicting
+        least-recently-used first (mtime order — ``lookup`` touches on
+        read).  Races with concurrent processes are benign: eviction is a
+        best-effort unlink of a complete entry, a loser just re-plans, and
+        every OSError (already gone, permissions, NFS lag) is swallowed.
+        ``keep`` shields the just-inserted entry so the cap can never evict
+        the plan the caller is about to rely on."""
+        if not self.max_entries or not self.cache_dir:
+            return
+        try:
+            names = [
+                n for n in os.listdir(self.cache_dir)
+                if n.startswith("plan-") and n.endswith(".pkl")
+            ]
+        except OSError:
+            return
+        if len(names) <= self.max_entries:
+            return
+
+        def mtime(n: str) -> float:
+            try:
+                return os.path.getmtime(os.path.join(self.cache_dir, n))
+            except OSError:
+                return float("inf")  # can't stat — treat as fresh, skip
+
+        victims = sorted(names, key=mtime)
+        excess = len(names) - self.max_entries
+        for n in victims:
+            if excess <= 0:
+                break
+            if n == keep:
+                continue
+            try:
+                os.unlink(os.path.join(self.cache_dir, n))
+                self.evictions += 1
+                excess -= 1
+            except OSError:
+                excess -= 1  # someone else removed it — still gone
 
     def get_plan(
         self, key: PlanKey, planner: Callable[[], PhysicalPlan]
@@ -360,6 +415,7 @@ class PlanCache:
             plan_hits=self.hits,
             plan_misses=self.misses,
             plan_disk_hits=self.disk_hits,
+            plan_evictions=self.evictions,
             executor_hits=self.executor_hits,
             executor_misses=self.executor_misses,
             hit_fraction=(self.hits / total) if total else 0.0,

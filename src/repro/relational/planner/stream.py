@@ -48,16 +48,20 @@ from jax.sharding import PartitionSpec as P
 
 from ...compat import fetch, shard_map
 from ...data.pipeline import Prefetcher
+from ...obs.trace import deposit, maybe_span
 from .. import operators as ops
 from ..source import DataSource, as_source
 from ..table import Table, from_numpy, pad_to
 from .executor import (
     SHUFFLE_AXIS,
+    RunnerBase,
     _axes,
     _make_mux,
     _mesh,
     _prep,
     _raise_on_dropped,
+    _report_keys,
+    _shuffle_histogram,
 )
 from .physical import PhysicalPlan, PNode
 
@@ -224,6 +228,8 @@ def compile_plan_streamed(
 
     mesh = _mesh(num_shards, num_pods)
     axes = _axes(num_pods)
+    report_keys = _report_keys(plan.root)
+    tracer = ctx.trace
     if mux is None:
         mux = _make_mux(mesh, plan, ctx.impl, ctx.pack_impl, ctx.num_chunks)
     if ctx.spill and mux.plan.pod_axis is not None:
@@ -341,13 +347,17 @@ def compile_plan_streamed(
                 )
 
     # ---- per-step evaluation ---------------------------------------------
-    def _exchange_streamed(t: Table, n: PNode, spills, do_spill: bool,
-                           bounded: bool):
+    def _exchange_streamed(t: Table, n: PNode, spills, reports,
+                           do_spill: bool, bounded: bool):
         """One morsel's worth of rows through the decoupled exchange.
 
         ``bounded``: apply ``ctx.exchange_rows`` as the per-(src,dst)
         message capacity (streamed shuffles and drain re-offers only;
-        resident exchanges keep the zero-drop bound)."""
+        resident exchanges keep the zero-drop bound).  The per-destination
+        arrival histogram is psum'd into ``reports`` ALWAYS (same
+        always-on discipline as the in-memory executor) — tracing decides
+        who reads it, never whether it exists, so the jitted program is
+        identical traced and untraced."""
         columns = list(n.schema)
         cap = t.valid.shape[0]
         msg_cap = cap
@@ -355,6 +365,8 @@ def compile_plan_streamed(
             msg_cap = min(cap, int(ctx.exchange_rows))
         rows = jnp.stack([t[c].astype(jnp.int32) for c in columns], axis=1)
         keys = t[n.info["key"]].astype(jnp.int32)
+        hist, _over = _shuffle_histogram(keys, t.valid, num_shards, axes)
+        reports[report_keys[id(n)]] = hist
         if do_spill:
             out_rows, out_valid, spilled = mux.hash_shuffle_spill(
                 keys, rows, SHUFFLE_AXIS, capacity=msg_cap, valid=t.valid
@@ -368,7 +380,7 @@ def compile_plan_streamed(
         cols = {c: out_rows[:, i] for i, c in enumerate(columns)}
         return Table(cols, out_valid), dropped
 
-    def _make_ev(tabs, local_states, drops, spills, spill_ids,
+    def _make_ev(tabs, local_states, drops, spills, spill_ids, reports,
                  drain_for=None):
         """Node evaluator for one step.
 
@@ -428,7 +440,7 @@ def compile_plan_streamed(
                     return t
                 if n.info["exkind"] == "shuffle":
                     out, d = _exchange_streamed(
-                        t, n, spills,
+                        t, n, spills, reports,
                         do_spill=id(n) in spill_ids,
                         bounded=sp.streamed(n)
                         or (drain_for is not None and id(n) == drain_for[0]),
@@ -567,6 +579,7 @@ def compile_plan_streamed(
         def body(st, *flat):
             drops: list[jax.Array] = []
             spills: dict[int, tuple] = {}
+            reports: dict[str, jax.Array] = {}
             nres = 2 * len(resident_prepped)
             morsel = None
             drain_for = None
@@ -581,14 +594,14 @@ def compile_plan_streamed(
                 for i, name in enumerate(resident_names)
             }
             tabs[streamed_name] = morsel
-            ev = _make_ev(tabs, st, drops, spills, spill_ids,
+            ev = _make_ev(tabs, st, drops, spills, spill_ids, reports,
                           drain_for=drain_for)
             new = dict(st)
             for b in breakers:
                 new[_bname(b)] = _merge(b, st[_bname(b)], ev)
             dropped = sum(drops) if drops else jnp.int32(0)
             spill_out = [spills[k] for k in sorted(spills)]
-            return new, spill_out, dropped
+            return new, spill_out, dropped, reports
 
         extra_specs = ()
         if with_rows or drain_node is not None:
@@ -597,7 +610,7 @@ def compile_plan_streamed(
             body,
             mesh=mesh,
             in_specs=(state_specs,) + res_specs + extra_specs,
-            out_specs=(state_specs, [(P(axes), P(axes))] * nspill, P()),
+            out_specs=(state_specs, [(P(axes), P(axes))] * nspill, P(), P()),
             check_vma=check_vma,
         )
         return jax.jit(fn)
@@ -643,9 +656,14 @@ def compile_plan_streamed(
                 {c: take[:, i].astype(np.int32) for i, c in enumerate(schema)}
             )
             dt = _prep(pad_to(dt, morsel_cap), num_shards)
-            st, spill_out, dropped = step(
-                st, *_resident_flats(), dt.columns, dt.valid
-            )
+            # drain-step reports are re-offers of already-counted rows, so
+            # they stay out of the per-edge arrival histograms
+            with maybe_span(tracer, f"drain-round:{rounds}", "stream",
+                            pending_rows=int(len(take))):
+                st, spill_out, dropped, _reports = step(
+                    st, *_resident_flats(), dt.columns, dt.valid
+                )
+                jax.block_until_ready(st)
             drops_h.append(dropped)
             fresh = _collect_spill(spill_out, len(schema))
             if len(fresh):
@@ -684,10 +702,70 @@ def compile_plan_streamed(
                     "budget)"
                 )
 
+    # ---- per-edge arrival accumulation -------------------------------------
+    # Shuffle edges whose input varies morsel-to-morsel: their per-step
+    # histograms accumulate to ONE traversal of the stream per pass.  A
+    # resident-side edge inside a streamed pass instead re-ships its whole
+    # (unchanging) table every step — its traversal count is the step
+    # count, and the byte model prices one shipment, so the report carries
+    # the multiplier explicitly.
+    streaming_edge_keys = set()
+
+    def _mark_streaming(n: PNode, seen: set) -> None:
+        if id(n) in seen:
+            return
+        seen.add(id(n))
+        for c in n.children:
+            _mark_streaming(c, seen)
+        if (
+            n.kind == "exchange"
+            and n.info["exkind"] == "shuffle"
+            and sp.streamed(n)
+        ):
+            streaming_edge_keys.add(report_keys[id(n)])
+
+    _mark_streaming(plan.root, set())
+
+    def _accumulate_reports(edge_hists, reports, p: int) -> None:
+        """Fold one step's psum'd histograms into the per-(edge, pass)
+        accumulators.  Keyed by pass: a shuffle shared across passes (Q17's
+        lineitem shuffle feeds both) re-ships the stream per pass, so each
+        traversal is measured against the model separately — summing them
+        would read as 2x the modeled single-traversal bytes."""
+        for k, h in reports.items():
+            arr = np.asarray(fetch(h)).astype(np.int64)
+            ek = (k, p)
+            hist, n_steps = edge_hists.get(ek, (0, 0))
+            edge_hists[ek] = (hist + arr, n_steps + 1)
+
+    def _final_reports(edge_hists) -> dict:
+        """Executor-shaped report dict from the accumulators.  Edges seen
+        in one pass keep their base key; multi-pass edges split into
+        ``<key>@p<pass>`` traversals.  Streamed plans never salt (salted
+        plans refuse to stream), so overload is the plain-route arrival
+        skew of the whole stream."""
+        passes_of: dict[str, list[int]] = {}
+        for k, p in edge_hists:
+            passes_of.setdefault(k, []).append(p)
+        out: dict = {}
+        for (k, p), (h, n_steps) in sorted(edge_hists.items()):
+            key = f"{k}@p{p}" if len(passes_of[k]) > 1 else k
+            total = max(int(h.sum()), 1)
+            over = float(h.max()) * num_shards / total
+            out[key] = {
+                "hist": h,
+                "traversals": 1 if k in streaming_edge_keys else n_steps,
+                "overload": over,
+                "plain_overload": over,
+                "salted": False,
+            }
+        return out
+
     # ---- the runner --------------------------------------------------------
     def run():
         st = states
         drops_h: list = []
+        edge_hists: dict = {}
         stats = {
             "passes": sp.num_passes,
             "morsels": 0,
@@ -697,66 +775,75 @@ def compile_plan_streamed(
             "prefetch_total_s": 0.0,
         }
         for p, streamed_bs, resident_bs, spill_nodes in pass_plan:
-            if resident_bs:
-                key = (p, "resident")
+            with maybe_span(tracer, f"pass:{p}", "stream",
+                            streamed_breakers=len(streamed_bs),
+                            resident_breakers=len(resident_bs)):
+                if resident_bs:
+                    key = (p, "resident")
+                    if key not in steps:
+                        steps[key] = _build_step(
+                            resident_bs, with_rows=False, spill_nodes=[],
+                            drain_node=None,
+                        )
+                    st, _, dropped, reports = steps[key](
+                        st, *_resident_flats()
+                    )
+                    _accumulate_reports(edge_hists, reports, p)
+                    drops_h.append(dropped)
+                if not streamed_bs:
+                    continue
+                key = (p, "streamed")
                 if key not in steps:
                     steps[key] = _build_step(
-                        resident_bs, with_rows=False, spill_nodes=[],
+                        streamed_bs, with_rows=True, spill_nodes=spill_nodes,
                         drain_node=None,
                     )
-                st, _, dropped = steps[key](st, *_resident_flats())
-                drops_h.append(dropped)
-            if not streamed_bs:
-                continue
-            key = (p, "streamed")
-            if key not in steps:
-                steps[key] = _build_step(
-                    streamed_bs, with_rows=True, spill_nodes=spill_nodes,
-                    drain_node=None,
+                step = steps[key]
+                pending = np.zeros((0, 0), np.int32)
+                it = Prefetcher(
+                    (_prep(chunk, num_shards) for chunk in src.chunks()),
+                    depth=ctx.prefetch_depth,
                 )
-            step = steps[key]
-            pending = np.zeros((0, 0), np.int32)
-            it = Prefetcher(
-                (_prep(chunk, num_shards) for chunk in src.chunks()),
-                depth=ctx.prefetch_depth,
-            )
-            t0 = time.perf_counter()
-            wait = 0.0
-            while True:
-                w0 = time.perf_counter()
-                try:
-                    m = next(it)
-                except StopIteration:
+                t0 = time.perf_counter()
+                wait = 0.0
+                while True:
+                    w0 = time.perf_counter()
+                    try:
+                        m = next(it)
+                    except StopIteration:
+                        wait += time.perf_counter() - w0
+                        break
                     wait += time.perf_counter() - w0
-                    break
-                wait += time.perf_counter() - w0
-                stats["morsels"] += 1
-                st, spill_out, dropped = step(
-                    st, *_resident_flats(), m.columns, m.valid
-                )
-                # block on the fold: otherwise async dispatch returns
-                # instantly and the device compute queued here gets billed
-                # to the *next* ``next(it)`` wait, inverting the overlap
-                # measurement
-                jax.block_until_ready(st)
-                drops_h.append(dropped)
-                if spill_nodes:
-                    fresh = _collect_spill(
-                        spill_out, len(spill_nodes[0].schema)
+                    stats["morsels"] += 1
+                    with maybe_span(tracer, f"morsel:{stats['morsels']}",
+                                    "stream", pass_idx=p):
+                        st, spill_out, dropped, reports = step(
+                            st, *_resident_flats(), m.columns, m.valid
+                        )
+                        # block on the fold: otherwise async dispatch returns
+                        # instantly and the device compute queued here gets
+                        # billed to the *next* ``next(it)`` wait, inverting
+                        # the overlap measurement
+                        jax.block_until_ready(st)
+                    _accumulate_reports(edge_hists, reports, p)
+                    drops_h.append(dropped)
+                    if spill_nodes:
+                        fresh = _collect_spill(
+                            spill_out, len(spill_nodes[0].schema)
+                        )
+                        stats["spilled_rows"] += int(len(fresh))
+                        pending = (
+                            np.concatenate([pending, fresh])
+                            if pending.size
+                            else fresh
+                        )
+                stats["prefetch_wait_s"] += wait
+                stats["prefetch_total_s"] += time.perf_counter() - t0
+                if spill_nodes and len(pending):
+                    st = _drain(
+                        p, spill_nodes[0], streamed_bs, pending, st, drops_h,
+                        stats,
                     )
-                    stats["spilled_rows"] += int(len(fresh))
-                    pending = (
-                        np.concatenate([pending, fresh])
-                        if pending.size
-                        else fresh
-                    )
-            stats["prefetch_wait_s"] += wait
-            stats["prefetch_total_s"] += time.perf_counter() - t0
-            if spill_nodes and len(pending):
-                st = _drain(
-                    p, spill_nodes[0], streamed_bs, pending, st, drops_h,
-                    stats,
-                )
         dropped_total = sum(int(fetch(d)) for d in drops_h)
         if dropped_total:
             _raise_on_dropped(plan.name, jnp.int32(dropped_total))
@@ -765,12 +852,45 @@ def compile_plan_streamed(
         stats["prefetch_overlap_fraction"] = (
             1.0 - stats["prefetch_wait_s"] / total if total > 0 else 0.0
         )
-        run.stats = stats
-        return _finalize_root(st)
+        return _finalize_root(st), stats, _final_reports(edge_hists)
 
-    run.stats = {}
-    run.exchange_report = {}
-    return run
+    from ...obs.model_check import edge_models
+
+    return _StreamedRunner(plan, run, edge_models(plan), tracer)
+
+
+class _StreamedRunner(RunnerBase):
+    """Zero-arg streamed runner.
+
+    Unlike the in-memory :class:`~.executor.CompiledRunner`, streamed
+    runners are built per call chain (never memoized), so they may hold the
+    compile-time tracer and deposit into it directly.  ``.stats`` keeps the
+    historical morsel/pass/spill/prefetch counters of the LAST run; the
+    same numbers ride each run's :class:`QueryTrace` as ``counters``.
+    """
+
+    def __init__(self, plan, run_fn, models: dict, tracer):
+        self._plan = plan
+        self._run_fn = run_fn
+        self._models = models
+        self._tracer = tracer
+        self.stats: dict = {}
+
+    def __call__(self):
+        from ...obs.model_check import build_query_trace
+
+        t0 = time.perf_counter()
+        result, stats, reports = self._run_fn()
+        measured = time.perf_counter() - t0
+        self.stats = stats
+        qt = build_query_trace(
+            self._plan, reports, self._models,
+            counters={k: float(v) for k, v in stats.items()},
+            measured_s=measured,
+        )
+        self._last_trace = qt
+        deposit(self._tracer, qt)
+        return result
 
 
 __all__ = ["compile_plan_streamed", "BREAKER_KINDS"]

@@ -23,8 +23,10 @@ version to fall back to.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
+from ...obs.trace import deposit, maybe_span
 from ..datagen import (
     LINESTATUS,
     ORDERPRIORITIES,
@@ -32,10 +34,10 @@ from ..datagen import (
     SHIPMODES,
     date_to_days,
 )
-from ..context import StatsMode, resolve_context
+from ..context import ExecutionContext, StatsMode, require_context
 from ..source import MorselView, as_source
 from . import logical as L
-from .executor import execute_plan
+from .executor import compile_plan
 from .logical import Aggregate, Filter, GroupBy, HashJoin, Project, Scan, TopK
 from .logical import col, lit, where
 from .physical import PhysicalPlan, PlannerConfig, plan_physical
@@ -68,15 +70,16 @@ class PlannedQuery:
         )
 
 
-def run_query(pq: PlannedQuery, tables: dict, ctx=None, **legacy):
+def run_query(pq: PlannedQuery, tables: dict, ctx=None):
     """Plan against the actual source capacities, execute, finalize.
 
     ``tables`` maps base-table names to :class:`Table`\\ s or
     :class:`~repro.relational.source.DataSource`\\ s.  Execution is
     parameterized by one :class:`~repro.relational.context.ExecutionContext`
-    (``ctx``); the old per-knob kwargs (``num_shards`` positionally,
-    ``impl=``, ``stats="collect"``, ...) still resolve for one release
-    through the deprecation shim.
+    (``ctx``, or None for single-shard defaults).  With ``ctx.trace`` set,
+    the run records plan/compile/execute spans and deposits the run's
+    :class:`~repro.obs.trace.QueryTrace` (per-edge measured vs modeled
+    exchange bytes) into the tracer.
 
     Out-of-core: a chunked DataSource streams morsel-by-morsel through
     :func:`~repro.relational.planner.stream.compile_plan_streamed`.  With
@@ -86,7 +89,10 @@ def run_query(pq: PlannedQuery, tables: dict, ctx=None, **legacy):
     planner prices streamed shuffles at one morsel (``morsel_rows``
     reaches :func:`plan_physical`), and the plan-cache key covers it.
     """
-    ctx = resolve_context(ctx, legacy, where="run_query")
+    if ctx is None:
+        ctx = ExecutionContext()
+    ctx = require_context(ctx, where="run_query")
+    tracer = ctx.trace
     srcs = {t: as_source(tables[t]) for t in pq.tables}
     if ctx.morsel_rows is not None and not any(
         s.is_chunked for s in srcs.values()
@@ -116,26 +122,41 @@ def run_query(pq: PlannedQuery, tables: dict, ctx=None, **legacy):
         stats = ctx.planner_stats()
     catalog = {t: srcs[t].capacity for t in pq.tables}
     morsel = srcs[chunked[0]].chunk_rows if chunked else None
-    phys = pq.plan(
-        catalog, ctx.num_shards, num_pods=ctx.num_pods, cfg=ctx.cfg,
-        cross_pod=ctx.cross_pod, stats=stats, morsel_rows=morsel,
-    )
+    with maybe_span(tracer, f"plan:{pq.name}", "plan",
+                    num_shards=ctx.num_shards, num_pods=ctx.num_pods,
+                    streamed=bool(chunked)):
+        phys = pq.plan(
+            catalog, ctx.num_shards, num_pods=ctx.num_pods, cfg=ctx.cfg,
+            cross_pod=ctx.cross_pod, stats=stats, morsel_rows=morsel,
+        )
     if chunked:
         from .stream import compile_plan_streamed
 
-        raw = compile_plan_streamed(phys, srcs, ctx)()
+        with maybe_span(tracer, f"compile:{pq.name}", "compile",
+                        streamed=True):
+            runner = compile_plan_streamed(phys, srcs, ctx)
+        with maybe_span(tracer, f"execute:{pq.name}", "execute"):
+            raw = runner()  # deposits its own QueryTrace + pass/morsel spans
     else:
-        raw = execute_plan(phys, srcs, ctx)
+        with maybe_span(tracer, f"compile:{pq.name}", "compile",
+                        streamed=False):
+            runner = compile_plan(phys, srcs, ctx)
+        t0 = time.perf_counter()
+        with maybe_span(tracer, f"execute:{pq.name}", "execute"):
+            raw, qt = runner.collect(runner.dispatch(), t_dispatch=t0)
+        deposit(tracer, qt)
     return pq.finalize(raw) if pq.finalize else raw
 
 
-def explain_query(pq: PlannedQuery, catalog: L.Catalog, ctx=None, **legacy) -> str:
+def explain_query(pq: PlannedQuery, catalog: L.Catalog, ctx=None) -> str:
     """Render the physical plan the context would execute.
 
     ``StatsMode.COLLECT`` is not explainable without the tables — collect a
     profile first and pass it via ``StatsMode.PROFILE``.
     """
-    ctx = resolve_context(ctx, legacy, where="explain_query")
+    if ctx is None:
+        ctx = ExecutionContext()
+    ctx = require_context(ctx, where="explain_query")
     return pq.plan(
         catalog, ctx.num_shards, num_pods=ctx.num_pods, cfg=ctx.cfg,
         cross_pod=ctx.cross_pod, stats=ctx.planner_stats(),

@@ -44,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import registry
+from repro.obs.trace import maybe_span
 
 
 def sample_token(key, logits: jax.Array, temperature: float = 0.0) -> jax.Array:
@@ -303,7 +304,10 @@ class ContinuousEngine:
     """
 
     def __init__(self, api: registry.ModelApi, batch_size: int, capacity: int,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0, tracer=None):
+        #: Optional :class:`repro.obs.trace.Tracer` — admission rounds,
+        #: prefill groups and decode steps become spans on it.
+        self.tracer = tracer
         if api.decode_step_slots is None:
             raise NotImplementedError(
                 f"continuous batching needs a per-position KV cache; "
@@ -396,7 +400,10 @@ class ContinuousEngine:
         batch = {"tokens": jnp.asarray(prompts)}
         if extra:
             batch.update({k: jnp.asarray(v) for k, v in extra.items()})
-        logits, pref_cache = self._prefill(params, batch)
+        with maybe_span(self.tracer, f"prefill:len{plen}", "serve",
+                        requests=len(requests), step=step):
+            logits, pref_cache = self._prefill(params, batch)
+            jax.block_until_ready(logits)
         self.stats["prefill_tokens"] += len(requests) * plen
         # The context a slot starts with is the PREFILL CACHE length, not the
         # prompt length — the VLM frontend prepends patch rows, so its cache
@@ -510,10 +517,15 @@ class ContinuousEngine:
                 by_len: dict[int, list[Request]] = {}
                 for r in admittable:
                     by_len.setdefault(r.prompt.shape[0], []).append(r)
-                for plen in sorted(by_len):
-                    cache = self._admit_group(
-                        params, cache, by_len[plen], step, t0, extra_inputs
-                    )
+                if by_len:
+                    with maybe_span(self.tracer, f"admission-round:{step}",
+                                    "serve", admitted=len(admittable),
+                                    groups=len(by_len)):
+                        for plen in sorted(by_len):
+                            cache = self._admit_group(
+                                params, cache, by_len[plen], step, t0,
+                                extra_inputs,
+                            )
                 self.alloc.check()
 
                 if not self.alloc.live:
@@ -524,11 +536,15 @@ class ContinuousEngine:
 
                 # -- one fixed-shape decode step over every slot -----------
                 self.key, sub = jax.random.split(self.key)
-                logits, cache = self._decode(
-                    params, jnp.asarray(self._tokens[:, None]), cache,
-                    jnp.asarray(self._positions),
-                )
-                sampled = np.asarray(sample_token(sub, logits, self.temperature))
+                with maybe_span(self.tracer, f"decode-step:{step}", "serve",
+                                live=len(self.alloc.live)):
+                    logits, cache = self._decode(
+                        params, jnp.asarray(self._tokens[:, None]), cache,
+                        jnp.asarray(self._positions),
+                    )
+                    sampled = np.asarray(
+                        sample_token(sub, logits, self.temperature)
+                    )
                 self.stats["decode_steps"] += 1
                 self.stats["slot_steps"] += B
                 self.stats["live_slot_steps"] += len(self.alloc.live)

@@ -48,8 +48,9 @@ import numpy as np
 from repro.core.autotune import tune_shared_config
 from repro.core.multiplexer import make_multiplexer
 from repro.core.topology import ChipSpec, V5E
+from repro.obs.trace import QueryTrace, deposit, maybe_span
 from repro.relational import stats as rstats
-from repro.relational.context import ExecutionContext, StatsMode, resolve_context
+from repro.relational.context import ExecutionContext, StatsMode, require_context
 from repro.relational.planner.executor import _mesh
 from repro.relational.planner.physical import PhysicalPlan, plan_physical
 from repro.relational.planner.plan_cache import PlanCache, PlanKey, plan_key
@@ -75,6 +76,11 @@ class QueryRequest:
     plan_cache_hit: bool | None = None
     executor_cache_hit: bool | None = None
     result: Any = None
+    #: This run's device-side measurement (per-edge exchange bytes,
+    #: histograms, model predictions).  Collected per-request from the
+    #: runner — the runner itself is shared across concurrent requests, so
+    #: the trace lives here, not on it.
+    trace: QueryTrace | None = None
     _t_arrive: float | None = dataclasses.field(default=None, repr=False)
 
 
@@ -87,11 +93,11 @@ class QueryServeEngine:
     multiplexer knobs, and stats mode (``StatsMode.COLLECT`` profiles the
     tables once at construction so plans are skew-aware;
     ``StatsMode.PROFILE`` uses ``ctx.stats_profile``; STATIC keeps static
-    plans).  The old ``num_shards=``/``num_pods=``/``stats=`` kwargs still
-    resolve for one release through the deprecation shim.  ``cache``
-    defaults to a fresh in-process :class:`PlanCache`; hand one a
-    ``cache_dir`` (or set ``REPRO_PLAN_CACHE_DIR``) and plans persist
-    across engine processes.
+    plans).  ``ctx.trace`` attaches a tracer: every admission round and
+    request becomes a span, and each request's :class:`QueryTrace` is
+    deposited.  ``cache`` defaults to a fresh in-process
+    :class:`PlanCache`; hand one a ``cache_dir`` (or set
+    ``REPRO_PLAN_CACHE_DIR``) and plans persist across engine processes.
     """
 
     def __init__(
@@ -104,9 +110,10 @@ class QueryServeEngine:
         chip: ChipSpec = V5E,
         topology: str = "ring",
         templates: Sequence[PlannedQuery] | None = None,
-        **legacy: Any,
     ):
-        ctx = resolve_context(ctx, legacy, where="QueryServeEngine")
+        if ctx is None:
+            ctx = ExecutionContext()
+        ctx = require_context(ctx, where="QueryServeEngine")
         self.ctx = ctx
         self.tables = dict(tables)
         self.num_shards = ctx.num_shards
@@ -174,6 +181,10 @@ class QueryServeEngine:
                 pipeline_chunks=tuned.pipeline_chunks,
                 transport_chunks=tuned.transport_chunks,
             )
+            if self.ctx.trace is not None:
+                self.ctx.trace.add_span(
+                    "mux:shared", cat="serve", **self._mux.describe()
+                )
         return self._mux
 
     def _runner(self, req: QueryRequest):
@@ -241,20 +252,33 @@ class QueryServeEngine:
             for r in arrived:
                 r.queue_rounds += 1
             # Concurrent execution: dispatch every admitted query before
-            # finalizing any — the jitted programs overlap on the async
-            # runtime while the host is still launching the rest.
-            launched = []
-            for slot, r in batch:
-                runner = self._runner(r)
-                launched.append((slot, r, runner, runner.dispatch()))
-            for slot, r, runner, out in launched:
-                raw = runner.finalize(out)
-                r.result = r.query.finalize(raw) if r.query.finalize else raw
-                r.ttfr_s = time.perf_counter() - r._t_arrive
-                r.finished_round = rnd
-                self.alloc.release(slot)
-                self._account(r)
-                done.append(r)
+            # collecting any — the jitted programs overlap on the async
+            # runtime while the host is still launching the rest.  Results
+            # and traces come back per-request from collect(): the runner
+            # is shared (memoized) across the batch, so nothing per-run is
+            # ever written onto it — that was the exchange_report race.
+            tracer = self.ctx.trace
+            with maybe_span(tracer, f"admission-round:{rnd}", "serve",
+                            admitted=len(batch), queued=len(arrived)):
+                launched = []
+                for slot, r in batch:
+                    runner = self._runner(r)
+                    t0 = time.perf_counter()
+                    launched.append((slot, r, runner, runner.dispatch(), t0))
+                for slot, r, runner, out, t0 in launched:
+                    with maybe_span(tracer, f"request:{r.query.name}",
+                                    "serve", tenant=r.tenant):
+                        raw, qt = runner.collect(out, t_dispatch=t0)
+                    r.trace = qt
+                    deposit(tracer, qt)
+                    r.result = (
+                        r.query.finalize(raw) if r.query.finalize else raw
+                    )
+                    r.ttfr_s = time.perf_counter() - r._t_arrive
+                    r.finished_round = rnd
+                    self.alloc.release(slot)
+                    self._account(r)
+                    done.append(r)
             self.alloc.check()
             rnd += 1
             if rnd - self.rounds > max_rounds:

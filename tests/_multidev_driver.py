@@ -718,22 +718,24 @@ def scenario_skewed_q17():
     salted_plan = pq.plan(catalog, 8, stats=stats)
     assert "salted x" in salted_plan.explain()
     run = executor.compile_plan(salted_plan, tabs)
-    got = pq.finalize(run())  # compile_plan raises on any dropped row
+    raw, qt = run.collect(run.dispatch())  # collect raises on dropped rows
+    got = pq.finalize(raw)
     np.testing.assert_allclose(float(got), want, rtol=1e-3)
-    (rep,) = run.exchange_report.values()
-    assert bool(rep["salted"])
-    plain_over = float(rep["plain_overload"])
-    salted_over = float(rep["overload"])
+    (edge,) = qt.edges
+    assert edge.salted
+    plain_over = float(edge.plain_overload)
+    salted_over = float(edge.overload)
     assert plain_over > 2.0, plain_over
     assert salted_over < 1.3, salted_over
     assert salted_over < plain_over
 
     # the static plan routes plain and eats the full overload
     run0 = executor.compile_plan(pq.plan(catalog, 8), tabs)
-    got0 = pq.finalize(run0())
+    raw0, qt0 = run0.collect(run0.dispatch())
+    got0 = pq.finalize(raw0)
     np.testing.assert_allclose(float(got0), want, rtol=1e-3)
-    (rep0,) = run0.exchange_report.values()
-    assert float(rep0["overload"]) == plain_over
+    (edge0,) = qt0.edges
+    assert float(edge0.overload) == plain_over
 
     # runtime gate: a salted PLAN on balanced data keeps the plain route.
     # Q17's shuffle sits behind the semi-join (2 surviving keys are
@@ -749,17 +751,16 @@ def scenario_skewed_q17():
     assert "salted x" in plan18.explain()
     uni = datagen.gen_all(0.01)
     run_u = executor.compile_plan(plan18, uni)
-    got_u = pq18.finalize(run_u())
+    raw_u, qt_u = run_u.collect(run_u.dispatch())
+    got_u = pq18.finalize(raw_u)
     want_u = oracle.q18_oracle(uni["lineitem"], uni["orders"], uni["customer"])
     for k in want_u:
         np.testing.assert_allclose(
             np.asarray(got_u[k]), np.asarray(want_u[k]), rtol=1e-3
         )
-    rep_u = next(
-        r for k, r in run_u.exchange_report.items() if "l_orderkey" in k
-    )
-    assert not bool(rep_u["salted"])
-    assert float(rep_u["plain_overload"]) < 1.5
+    edge_u = next(e for e in qt_u.edges if "l_orderkey" in e.key)
+    assert not edge_u.salted
+    assert float(edge_u.plain_overload) < 1.5
     print("PASS skewed_q17")
 
 
@@ -837,8 +838,9 @@ def scenario_exchange_report():
     results = []
     for plan in (plan_cold, plan_re, plan_disk):
         run = executor.compile_plan(plan, tables)
-        results.append(pq.finalize(run()))
-        reports.append(run.exchange_report)
+        raw, qt = run.collect(run.dispatch())
+        results.append(pq.finalize(raw))
+        reports.append(qt.exchange_report())
 
     base = reports[0]
     assert set(base) == {"shuffle[o_orderkey]#0", "shuffle[l_orderkey]#1"}
@@ -951,6 +953,112 @@ def scenario_oocore_spill():
         np.testing.assert_array_equal(
             np.asarray(spilled[k]), np.asarray(oracle[k]), err_msg=k)
     print("PASS oocore_spill")
+
+
+def scenario_traced_query():
+    """The telemetry-spine acceptance run: ONE traced streamed Q17 over 8
+    shards yields a Perfetto-loadable trace whose spans cover
+    plan/compile/pass/morsel/exchange, whose per-edge measured wire bytes
+    sit inside the 2x byte-model bound with a model-error ratio reported
+    per edge — and tracing observes without perturbing: the result is
+    bit-identical to the untraced run and planning happened exactly as
+    often (the trace knob is payload, not identity)."""
+    import json
+
+    from repro.obs.export import chrome_trace_events, tracer_to_dict
+    from repro.obs.model_check import assert_bytes_within, model_report
+    from repro.obs.trace import Tracer
+    from repro.relational import datagen
+    from repro.relational import stats as rstats
+    from repro.relational.context import StatsMode
+    from repro.relational.planner import tpch
+    from repro.relational.planner.physical import plan_physical
+
+    tabs = datagen.gen_all(0.01)
+    pq = tpch.q17()
+    tables = {t: tabs[t] for t in pq.tables}
+    base = Ctx(
+        num_shards=8, morsel_rows=4096,
+        stats_mode=StatsMode.PROFILE,
+        stats_profile=rstats.collect_stats(tables),
+    )
+    before = plan_physical.calls
+    want = tpch.run_query(pq, tables, base)            # tracing OFF
+    per_run = plan_physical.calls - before
+
+    tracer = Tracer()
+    traced = base.with_(trace=tracer)
+    assert traced == base and hash(traced) == hash(base)  # same cache keys
+    got = tpch.run_query(pq, tables, traced)           # tracing ON
+    assert plan_physical.calls - before == 2 * per_run, "tracing replanned"
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    # the span hierarchy is complete: plan -> compile -> execute, with the
+    # streamed runner's pass/morsel spans and per-edge exchange spans inside
+    fams = {s.name.split(":")[0]
+            for root in tracer.spans for s in root.walk()}
+    assert {"plan", "compile", "execute", "pass", "morsel",
+            "exchange"} <= fams, fams
+
+    # one QueryTrace, a model-error ratio per edge, bytes inside the gate
+    (qt,) = tracer.query_traces
+    assert qt.query == "q17" and qt.edges
+    rep = model_report(qt)
+    assert set(rep["edges"]) == {e.key for e in qt.edges}
+    assert all(v["byte_model_err"] is not None for v in rep["edges"].values())
+    assert_bytes_within(qt)  # the same 2x bound CI gates
+
+    # Perfetto-loadable: jsonable, B/E matched per track, sorted timestamps
+    json.dumps(tracer_to_dict(tracer, process_name="driver"))
+    dur = [e for e in chrome_trace_events(tracer) if e["ph"] in ("B", "E")]
+    assert [e["ts"] for e in dur] == sorted(e["ts"] for e in dur)
+    depth = 0
+    for e in dur:
+        depth += 1 if e["ph"] == "B" else -1
+        assert depth >= 0
+    assert depth == 0 and len(dur) >= 2 * 6
+    print("PASS traced_query")
+
+
+def scenario_qserve_traced_mix():
+    """The exchange-report race, fixed at the source: one serve round
+    running Q3 and Q17 through MEMOIZED executors returns a per-request
+    QueryTrace that carries its OWN query's edges.  The old
+    ``run.exchange_report`` function attribute was clobbered by whichever
+    overlapped run finalized last — under the engine's async dispatch a Q3
+    request could read Q17's report."""
+    from repro.obs.trace import Tracer
+    from repro.relational import datagen
+    from repro.relational.planner import tpch
+    from repro.relational.planner.plan_cache import PlanCache
+    from repro.serve import QueryRequest, QueryServeEngine
+
+    tabs = datagen.gen_all(0.01)
+    templates = [tpch.q3(), tpch.q17()]
+    names = sorted({t for pq in templates for t in pq.tables})
+    tracer = Tracer()
+    engine = QueryServeEngine(
+        {n: tabs[n] for n in names}, Ctx(num_shards=8, trace=tracer),
+        num_slots=2, cache=PlanCache(), templates=templates,
+    )
+    # two interleaved copies of each template: every round overlaps a Q3
+    # and a Q17 through the same memoized runners
+    done = engine.serve(
+        [QueryRequest("t", pq) for _ in range(2) for pq in templates]
+    )
+    expect = {
+        "q3": {"shuffle[o_orderkey]#0", "shuffle[l_orderkey]#1"},
+        "q17": {"shuffle[l_partkey]#0"},
+    }
+    for r in done:
+        assert r.trace is not None and r.trace.query == r.query.name
+        assert {e.key for e in r.trace.edges} == expect[r.query.name], (
+            r.query.name, [e.key for e in r.trace.edges],
+        )
+    assert len(tracer.query_traces) == len(done) == 4
+    cats = {s.cat for root in tracer.spans for s in root.walk()}
+    assert "serve" in cats, cats
+    print("PASS qserve_traced_mix")
 
 
 SCENARIOS = {

@@ -263,22 +263,24 @@ def scenario_salted_pod_shuffle():
     plan = pq.plan(catalog, pods * n, num_pods=pods, stats=stats)
     assert "salted x" in plan.explain()
     run = executor.compile_plan(plan, tabs)
-    got = pq.finalize(run())
+    raw, qt = run.collect(run.dispatch())
+    got = pq.finalize(raw)
     np.testing.assert_allclose(float(got), want, rtol=1e-3)
-    (rep,) = run.exchange_report.values()
-    assert bool(rep["salted"])
-    salted_over = float(rep["overload"])
-    plain_over = float(rep["plain_overload"])
+    (edge,) = qt.edges
+    assert edge.salted
+    salted_over = float(edge.overload)
+    plain_over = float(edge.plain_overload)
     assert plain_over > 2.0, plain_over
     assert salted_over < 1.3, salted_over
 
     run0 = executor.compile_plan(pq.plan(catalog, pods * n, num_pods=pods),
                                  tabs)
-    got0 = pq.finalize(run0())
+    raw0, qt0 = run0.collect(run0.dispatch())
+    got0 = pq.finalize(raw0)
     np.testing.assert_allclose(float(got0), want, rtol=1e-3)
-    (rep0,) = run0.exchange_report.values()
-    assert float(rep0["overload"]) == plain_over
-    assert salted_over < float(rep0["overload"])
+    (edge0,) = qt0.edges
+    assert float(edge0.overload) == plain_over
+    assert salted_over < float(edge0.overload)
     print("PASS salted_pod_shuffle")
 
 
@@ -318,6 +320,70 @@ def scenario_oocore_pod_stream():
     else:
         raise AssertionError("spill on the pod mesh did not raise")
     print("PASS oocore_pod_stream")
+
+
+def scenario_trace_merge():
+    """One timeline for the whole cluster: each process traces its own Q17
+    run and writes ``<dir>/q17-p<pid>.json``; after a cross-process
+    barrier, process 0 merges them into a single Perfetto timeline whose
+    events carry BOTH process tracks."""
+    import json
+    import shutil
+    import tempfile
+
+    from jax.experimental import multihost_utils
+
+    from repro.obs.export import merge_trace_dir, write_trace_dir
+    from repro.obs.trace import Tracer
+    from repro.relational import datagen
+    from repro.relational.planner import tpch
+
+    # all processes of this cluster share a host; key the dir on the
+    # coordinator address so concurrent clusters never collide
+    tag = (INFO.coordinator or "solo").replace(":", "-").replace("/", "-")
+    trace_dir = os.path.join(tempfile.gettempdir(), f"repro-trace-{tag}")
+    if INFO.process_id == 0:
+        shutil.rmtree(trace_dir, ignore_errors=True)
+        os.makedirs(trace_dir, exist_ok=True)
+    multihost_utils.sync_global_devices("trace-dir-ready")
+
+    mesh = _pod_mesh()
+    pods, n = mesh.devices.shape
+    tabs = datagen.gen_all(0.01)
+    pq = tpch.q17()
+    tracer = Tracer()  # pid resolves to jax.process_index()
+    assert tracer.pid == INFO.process_id
+    tpch.run_query(
+        pq, {t: tabs[t] for t in pq.tables},
+        ExecutionContext(num_shards=pods * n, num_pods=pods, trace=tracer),
+    )
+    path = write_trace_dir(tracer, trace_dir, basename="q17")
+    assert path.endswith(f"q17-p{INFO.process_id}.json")
+    multihost_utils.sync_global_devices("traces-written")
+
+    if INFO.process_id == 0:
+        merged = merge_trace_dir(
+            trace_dir, basename="q17",
+            out=os.path.join(trace_dir, "merged.json"),
+        )
+        pids = {e["pid"] for e in merged["traceEvents"]}
+        assert pids == set(range(INFO.num_processes)), pids
+        # every process contributed its exchange spans and byte counters
+        per_pid_names = {
+            pid: {e["name"] for e in merged["traceEvents"]
+                  if e["pid"] == pid and e["ph"] == "B"}
+            for pid in pids
+        }
+        for pid, names in per_pid_names.items():
+            assert any(nm.startswith("exchange:") for nm in names), (
+                pid, names)
+        assert merged["counters"]["exchange.measured_bytes"] > 0
+        with open(os.path.join(trace_dir, "merged.json")) as f:
+            json.load(f)  # Perfetto-loadable JSON on disk
+    multihost_utils.sync_global_devices("merge-checked")
+    if INFO.process_id == 0:
+        shutil.rmtree(trace_dir, ignore_errors=True)
+    print("PASS trace_merge")
 
 
 SCENARIOS = {

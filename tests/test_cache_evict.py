@@ -1,0 +1,166 @@
+"""LRU eviction of the on-disk plan cache (``REPRO_PLAN_CACHE_MAX``).
+
+A long-lived cache dir shared by many query templates must not grow
+without bound: ``max_entries`` caps the ``plan-*.pkl`` count, evicting by
+mtime — effectively least-recently-USED, because ``lookup`` touches the
+file on every disk hit.  The just-inserted entry is shielded (``keep``)
+so the cap can never evict the plan the caller is about to rely on, and
+eviction races with concurrent processes are benign: a loser just
+replans.
+"""
+
+import os
+import subprocess
+import sys
+
+from repro.relational.planner.physical import plan_physical
+from repro.relational.planner.plan_cache import PlanCache, plan_key
+from repro.relational.planner.tpch import ALL_QUERIES
+
+NODE = ALL_QUERIES["q6"]().logical
+
+
+def _key(rows: int):
+    """Distinct catalogs -> distinct cache keys for the same template."""
+    return plan_key(NODE, {"lineitem": rows}, 8)
+
+
+def _plan():
+    return plan_physical(NODE, {"lineitem": 8192}, 8, name="q6")
+
+
+def _entries(cache_dir) -> list:
+    return sorted(
+        n for n in os.listdir(cache_dir)
+        if n.startswith("plan-") and n.endswith(".pkl")
+    )
+
+
+def _set_mtime(cache_dir, digest: str, t: float) -> None:
+    """Pin an entry's recency (the filesystem's own stamps are too coarse
+    to order back-to-back inserts deterministically)."""
+    os.utime(os.path.join(cache_dir, f"plan-{digest}.pkl"), (t, t))
+
+
+T0 = 1_000_000_000.0  # any fixed epoch; only the ORDER matters
+
+
+def test_cap_bounds_entry_count_and_counts_evictions(tmp_path):
+    cache = PlanCache(cache_dir=str(tmp_path), max_entries=3)
+    plan = _plan()
+    keys = [_key(1024 * (i + 1)) for i in range(6)]
+    for i, k in enumerate(keys):
+        cache.insert(k, plan)
+        _set_mtime(tmp_path, k.digest, T0 + i)
+    assert len(_entries(tmp_path)) == 3
+    assert cache.evictions == 3
+    assert cache.record()["plan_evictions"] == 3
+    # survivors are the three MOST RECENT inserts
+    assert _entries(tmp_path) == sorted(
+        f"plan-{k.digest}.pkl" for k in keys[3:]
+    )
+
+
+def test_unlimited_by_default(tmp_path):
+    cache = PlanCache(cache_dir=str(tmp_path))  # no env, no arg -> 0
+    assert cache.max_entries == 0
+    plan = _plan()
+    for i in range(8):
+        cache.insert(_key(512 * (i + 1)), plan)
+    assert len(_entries(tmp_path)) == 8 and cache.evictions == 0
+
+
+def test_env_var_sets_cap(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE_MAX", "2")
+    cache = PlanCache(cache_dir=str(tmp_path))
+    assert cache.max_entries == 2
+    plan = _plan()
+    for i in range(4):
+        cache.insert(_key(512 * (i + 1)), plan)
+    assert len(_entries(tmp_path)) == 2
+
+
+def test_disk_hit_refreshes_recency(tmp_path):
+    """LRU, not FIFO: a lookup touches the file, so the oldest INSERT
+    survives if it was the most recently USED."""
+    cache = PlanCache(cache_dir=str(tmp_path), max_entries=2)
+    plan = _plan()
+    ka, kb = _key(1024), _key(2048)
+    cache.insert(ka, plan)
+    cache.insert(kb, plan)
+    _set_mtime(tmp_path, ka.digest, T0)
+    _set_mtime(tmp_path, kb.digest, T0 + 1)
+
+    # a fresh cache (memory level empty) reads A from disk -> utime touch
+    reader = PlanCache(cache_dir=str(tmp_path), max_entries=2)
+    assert reader.lookup(ka) is not None and reader.disk_hits == 1
+    assert os.path.getmtime(tmp_path / f"plan-{ka.digest}.pkl") > T0 + 1
+
+    cache.insert(_key(4096), plan)  # cap exceeded: victim is B, not A
+    names = _entries(tmp_path)
+    assert f"plan-{ka.digest}.pkl" in names
+    assert f"plan-{kb.digest}.pkl" not in names
+
+
+def test_keep_shields_the_just_inserted_entry(tmp_path):
+    """Even when the new entry lands with the OLDEST mtime (clock skew,
+    NFS), the cap evicts around it — never the plan being published."""
+    cache = PlanCache(cache_dir=str(tmp_path), max_entries=1)
+    plan = _plan()
+    ka, kb = _key(1024), _key(2048)
+    cache.insert(ka, plan)
+    _set_mtime(tmp_path, ka.digest, T0 + 100)  # A looks newer than B will
+
+    cache.insert(kb, plan)
+    # _enforce_cap ran inside insert with keep=B: B has the older mtime
+    # but survives; A is the victim
+    post = PlanCache(cache_dir=str(tmp_path), max_entries=1)
+    post.insert(kb, plan)  # re-publish is idempotent, still 1 entry
+    assert _entries(tmp_path) == [f"plan-{kb.digest}.pkl"]
+
+
+_EVICTOR_SCRIPT = """
+from repro.relational.planner import tpch
+from repro.relational.planner.plan_cache import PlanCache, plan_key
+
+node = tpch.ALL_QUERIES["q6"]().logical
+cache = PlanCache(cache_dir={cache_dir!r}, max_entries=2)
+key = plan_key(node, {{"lineitem": 9999}}, 8)
+plan, hit = cache.get_plan(key, lambda: tpch.ALL_QUERIES["q6"]().plan(
+    {{"lineitem": 8192}}, 8))
+assert not hit
+print("EVICTIONS", cache.evictions)
+"""
+
+
+def test_eviction_across_processes(tmp_path):
+    """A second process sharing the dir enforces the same cap; the parent
+    sees its oldest entries gone and a lookup of an evicted key is a
+    plain miss (the loser replans — never an error)."""
+    cache = PlanCache(cache_dir=str(tmp_path), max_entries=2)
+    plan = _plan()
+    keys = [_key(1024 * (i + 1)) for i in range(2)]
+    for i, k in enumerate(keys):
+        cache.insert(k, plan)
+        _set_mtime(tmp_path, k.digest, T0 + i)
+    assert len(_entries(tmp_path)) == 2
+
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    env["PYTHONPATH"] = (
+        os.path.join(os.path.dirname(__file__), "..", "src")
+        + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _EVICTOR_SCRIPT.format(cache_dir=str(tmp_path))],
+        capture_output=True, text=True, timeout=180, env=env,
+    )
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "EVICTIONS 1" in proc.stdout
+
+    assert len(_entries(tmp_path)) == 2
+    # the parent's oldest entry was the victim; a FRESH cache (no memory
+    # level) misses it and would simply replan
+    fresh = PlanCache(cache_dir=str(tmp_path), max_entries=2)
+    assert fresh.lookup(keys[0]) is None
+    assert fresh.lookup(keys[1]) is not None

@@ -1,38 +1,31 @@
-"""ExecutionContext API: legacy-kwarg equivalence and the one-shot shim.
+"""ExecutionContext API: the one way to parameterize execution.
 
-Contract from the PR spec: every legacy kwarg spelling maps onto the exact
-same ``ExecutionContext`` (dataclass equality), plans to the same
-plan-cache digest, and returns bit-identical results — and the deprecated
-spellings warn exactly once per process (``reset_deprecation_warning``
-re-arms the latch for testing).
+The PR-9 per-knob kwarg shim (``num_shards`` positionally, ``impl=``/
+``stats=``/... keywords, the one-shot DeprecationWarning latch) is gone.
+Old spellings now raise a pointed ``TypeError`` at the entry point
+(``require_context``) instead of warning, the context validates its knobs
+at construction, and the observability ``trace`` knob is excluded from
+equality/hash so traced and untraced runs share plan-cache entries and
+executor memos.
 """
 
 import dataclasses
-import warnings
 
 import jax
 import numpy as np
 import pytest
 
+from repro.obs.trace import Tracer
 from repro.relational import datagen
 from repro.relational.context import (
     ExecutionContext,
     StatsMode,
-    reset_deprecation_warning,
-    resolve_context,
+    require_context,
 )
 from repro.relational.distributed import q1_distributed, q6_distributed
 from repro.relational.planner import tpch
-from repro.relational.planner.plan_cache import plan_key
 
 SF = 0.004
-
-
-@pytest.fixture(autouse=True)
-def _rearm_shim():
-    reset_deprecation_warning()
-    yield
-    reset_deprecation_warning()
 
 
 @pytest.fixture(scope="module")
@@ -48,122 +41,53 @@ def _trees_equal(a, b) -> bool:
 
 
 # ---------------------------------------------------------------------------
-# Every legacy spelling resolves to the identical ExecutionContext.
+# Old spellings raise TypeError, pointing at the migration.
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("spelling", [
-    dict(ctx=1),                                   # old positional num_shards
-    dict(legacy=dict(num_shards=1)),               # old keyword
-    dict(legacy=dict(num_shards=1, impl=None)),    # impl=None was the default
-    dict(legacy=dict(num_shards=1, num_pods=1)),
-])
-def test_legacy_spellings_map_to_identical_context(spelling):
-    with pytest.warns(DeprecationWarning):
-        got = resolve_context(
-            spelling.get("ctx"), spelling.get("legacy"), where="test"
-        )
-        reset_deprecation_warning()
-    assert got == ExecutionContext(num_shards=1)
-    assert hash(got) == hash(ExecutionContext(num_shards=1))
-
-
-def test_legacy_stats_pun_is_unpunned():
-    with pytest.warns(DeprecationWarning):
-        collected = resolve_context(
-            None, dict(num_shards=1, stats="collect"), where="test"
-        )
-    assert collected.stats_mode is StatsMode.COLLECT
-    reset_deprecation_warning()
-
-    profile = {"lineitem": object()}
-    with pytest.warns(DeprecationWarning):
-        profiled = resolve_context(
-            None, dict(num_shards=1, stats=profile), where="test"
-        )
-    assert profiled.stats_mode is StatsMode.PROFILE
-    assert profiled.stats_profile == profile
-    # stats_profile is payload, not identity: contexts compare on knobs
-    assert profiled == ExecutionContext(
-        num_shards=1, stats_mode=StatsMode.PROFILE, stats_profile={"x": 1}
-    )
-
-
-def test_legacy_and_ctx_plan_to_same_digest(lineitem):
-    pq = tpch.q1()
-    catalog = {"lineitem": lineitem.capacity}
-    with pytest.warns(DeprecationWarning):
-        legacy = resolve_context(None, dict(num_shards=2), where="test")
-    ctx = ExecutionContext(num_shards=2)
-    assert legacy == ctx
-    k_legacy = plan_key(pq.logical, catalog, legacy.num_shards,
-                        num_pods=legacy.num_pods, cfg=legacy.cfg,
-                        cross_pod=legacy.cross_pod)
-    k_ctx = plan_key(pq.logical, catalog, ctx.num_shards,
-                     num_pods=ctx.num_pods, cfg=ctx.cfg,
-                     cross_pod=ctx.cross_pod)
-    assert k_legacy.digest == k_ctx.digest
-
-
-def test_legacy_and_ctx_results_bit_identical(lineitem):
-    oracle = q1_distributed(lineitem, ExecutionContext(num_shards=1))
-    with pytest.warns(DeprecationWarning):
-        via_int = q1_distributed(lineitem, 1)
-        reset_deprecation_warning()
-    with pytest.warns(DeprecationWarning):
-        via_kw = q1_distributed(lineitem, num_shards=1)
-    assert _trees_equal(oracle, via_int)
-    assert _trees_equal(oracle, via_kw)
-
-
-def test_run_query_legacy_matches_ctx(lineitem):
-    pq = tpch.q6()
-    tables = {"lineitem": lineitem}
-    oracle = tpch.run_query(pq, tables, ExecutionContext(num_shards=1))
-    with pytest.warns(DeprecationWarning):
-        legacy = tpch.run_query(pq, tables, 1)
-    assert _trees_equal(oracle, legacy)
-
-
-# ---------------------------------------------------------------------------
-# The shim warns exactly once per process.
-# ---------------------------------------------------------------------------
-
-def test_deprecated_kwargs_warn_exactly_once(lineitem):
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
+def test_positional_int_rejected(lineitem):
+    with pytest.raises(TypeError, match="ExecutionContext"):
         q6_distributed(lineitem, 1)
+
+
+def test_legacy_keyword_rejected(lineitem):
+    # the wrappers take (tables..., ctx=None, query-params...): the old
+    # per-knob keywords are plain unexpected-keyword TypeErrors now
+    with pytest.raises(TypeError):
         q1_distributed(lineitem, num_shards=1)
-        resolve_context(None, dict(num_shards=1), where="test")
-    deps = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    assert len(deps) == 1, [str(w.message) for w in deps]
-    assert "ExecutionContext" in str(deps[0].message)
+
+
+def test_legacy_stats_pun_rejected(lineitem):
+    pq = tpch.q6()
+    with pytest.raises(TypeError):
+        tpch.run_query(pq, {"lineitem": lineitem}, stats="collect")
+
+
+def test_require_context_names_the_migration():
+    with pytest.raises(TypeError, match="per-knob kwargs.*removed"):
+        require_context(4, where="test")
+    with pytest.raises(TypeError, match="test:"):
+        require_context({"num_shards": 4}, where="test")
+    ctx = ExecutionContext(num_shards=1)
+    assert require_context(ctx, where="test") is ctx
 
 
 def test_ctx_api_never_warns(lineitem):
+    import warnings
+
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("error", DeprecationWarning)
         q6_distributed(lineitem, ExecutionContext(num_shards=1))
     assert not rec
 
 
+def test_none_defaults_to_single_shard(lineitem):
+    oracle = q6_distributed(lineitem, ExecutionContext(num_shards=1))
+    assert _trees_equal(oracle, q6_distributed(lineitem))
+
+
 # ---------------------------------------------------------------------------
-# Shim error surface.
+# Construction-time validation.
 # ---------------------------------------------------------------------------
-
-def test_ctx_plus_legacy_kwargs_rejected(lineitem):
-    with pytest.raises(TypeError, match="cannot be combined"):
-        q6_distributed(lineitem, ExecutionContext(num_shards=1), num_shards=1)
-
-
-def test_unknown_kwarg_rejected(lineitem):
-    with pytest.raises(TypeError, match="unexpected keyword"):
-        q6_distributed(lineitem, 1, morsels=4)
-
-
-def test_positional_and_keyword_num_shards_conflict():
-    with pytest.raises(TypeError, match="positionally and by keyword"):
-        resolve_context(1, dict(num_shards=1), where="test")
-
 
 def test_context_validation():
     with pytest.raises(ValueError, match="not divisible"):
@@ -172,6 +96,8 @@ def test_context_validation():
         ExecutionContext(num_shards=1, stats_mode="collect")
     with pytest.raises(ValueError, match="requires stats_profile"):
         ExecutionContext(num_shards=1, stats_mode=StatsMode.PROFILE)
+    with pytest.raises(ValueError, match="only meaningful"):
+        ExecutionContext(num_shards=1, stats_profile={"lineitem": object()})
 
 
 def test_with_returns_updated_frozen_copy():
@@ -181,3 +107,27 @@ def test_with_returns_updated_frozen_copy():
     assert ctx.morsel_rows is None  # original untouched
     with pytest.raises(dataclasses.FrozenInstanceError):
         ctx.num_shards = 4
+
+
+# ---------------------------------------------------------------------------
+# The trace knob is payload, not identity: attaching a tracer can never
+# invalidate a plan-cache entry or an executor memo.
+# ---------------------------------------------------------------------------
+
+def test_trace_excluded_from_equality_and_hash():
+    plain = ExecutionContext(num_shards=2)
+    traced = ExecutionContext(num_shards=2, trace=Tracer())
+    assert plain == traced
+    assert hash(plain) == hash(traced)
+    # ... and repr doesn't leak the tracer object (stable cache-key text)
+    assert "Tracer" not in repr(traced)
+
+
+def test_stats_profile_excluded_from_equality():
+    profiled = ExecutionContext(
+        num_shards=1, stats_mode=StatsMode.PROFILE,
+        stats_profile={"lineitem": object()},
+    )
+    assert profiled == ExecutionContext(
+        num_shards=1, stats_mode=StatsMode.PROFILE, stats_profile={"x": 1}
+    )

@@ -106,11 +106,35 @@ def test_keys_survive_pickle_roundtrip():
 def test_single_device_report_is_empty():
     """n=1 elides exchanges: the report is {} before AND after a run —
     never stale, never populated with degenerate entries."""
+    import pytest
+
     tabs = datagen.gen_all(0.004)
     pq = tpch.q6()
     tables = {t: tabs[t] for t in pq.tables}
     plan = pq.plan({t: tables[t].capacity for t in pq.tables}, 1)
     run = compile_plan(plan, tables)
-    assert run.exchange_report == {}
-    run()
-    assert run.exchange_report == {}
+    with pytest.warns(DeprecationWarning, match="collect"):
+        assert run.exchange_report == {}
+    result, qt = run.collect(run.dispatch())
+    assert qt.exchange_report() == {}
+    assert qt.edges == ()
+
+
+def test_collect_is_pure_and_per_run():
+    """The old function-attribute report raced under the serve engine:
+    two in-flight runs of one memoized executor stomped a single
+    ``run.exchange_report``.  ``collect`` returns the QueryTrace with the
+    result instead of mutating the runner — two dispatches of the SAME
+    runner yield independent traces."""
+    tabs = datagen.gen_all(0.004)
+    pq = tpch.q6()
+    tables = {t: tabs[t] for t in tabs if t in pq.tables}
+    plan = pq.plan({t: tables[t].capacity for t in pq.tables}, 1)
+    run = compile_plan(plan, tables)
+    out_a, out_b = run.dispatch(), run.dispatch()
+    res_a, qt_a = run.collect(out_a)
+    res_b, qt_b = run.collect(out_b)
+    assert qt_a is not qt_b
+    assert qt_a.query == qt_b.query == plan.name
+    # collect never wrote runner state
+    assert run.last_trace is None

@@ -34,6 +34,8 @@ SCENARIOS = [
     "exchange_report",
     "oocore_streamed",
     "oocore_spill",
+    "traced_query",
+    "qserve_traced_mix",
 ]
 
 

@@ -29,6 +29,7 @@ SCENARIOS = [
     "ep_dispatch_two_level",
     "salted_pod_shuffle",
     "oocore_pod_stream",
+    "trace_merge",
 ]
 
 _PROBE = """

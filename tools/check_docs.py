@@ -26,6 +26,7 @@ DEFAULT_FILES = (
     os.path.join("docs", "MULTIHOST.md"),
     os.path.join("docs", "SERVING.md"),
     os.path.join("docs", "DATA.md"),
+    os.path.join("docs", "OBSERVABILITY.md"),
 )
 FENCE = re.compile(r"^```(\w*)\s*$")
 
